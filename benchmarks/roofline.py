@@ -1,0 +1,71 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ARTIFACTS = Path("artifacts/dryrun")
+
+
+def load_cells(variant: str = "baseline", mesh: str = "pod16x16"):
+    cells = []
+    for f in sorted(ARTIFACTS.glob(f"*__{mesh}__{variant}.json")):
+        cells.append(json.loads(f.read_text()))
+    return cells
+
+
+def table(variant: str = "baseline", mesh: str = "pod16x16", out=sys.stdout) -> list:
+    cells = load_cells(variant, mesh)
+    rows = []
+    hdr = (f"{'arch':>20s} {'shape':<12s} {'dom':<8s} {'compute':>9s} {'memory':>9s} "
+           f"{'ici':>8s} {'dcn':>8s} {'bound':>9s} {'useful':>6s} {'mfu<=':>6s} "
+           f"{'mem/dev':>8s} fits")
+    print(hdr, file=out)
+    for c in cells:
+        if c["status"] == "skipped":
+            print(f"{c['arch']:>20s} {c['shape']:<12s} SKIPPED ({c['reason'][:58]})", file=out)
+            rows.append(c)
+            continue
+        if c["status"] != "ok":
+            print(f"{c['arch']:>20s} {c['shape']:<12s} ERROR {c.get('error','')[:70]}", file=out)
+            rows.append(c)
+            continue
+        r = c["roofline"]
+        m = c["memory"]
+        print(f"{c['arch']:>20s} {c['shape']:<12s} {r['dominant'][:-2]:<8s} "
+              f"{r['compute_s']*1e3:8.1f}m {r['memory_s']*1e3:8.1f}m "
+              f"{r['ici_s']*1e3:7.1f}m {r['dcn_s']*1e3:7.1f}m "
+              f"{r['step_time_bound_s']*1e3:8.1f}m {r['useful_compute_ratio']:6.2f} "
+              f"{r['mfu_bound']:6.3f} {m['peak_per_device']/1e9:7.2f}G "
+              f"{'Y' if m['fits_16g'] else 'N'}", file=out)
+        rows.append(c)
+    return rows
+
+
+def pick_hillclimb_cells(variant: str = "baseline"):
+    """The three most interesting cells: worst roofline fraction (mfu_bound),
+    most collective-bound, most representative of the technique (seq-sharded
+    long-context decode)."""
+    cells = [c for c in load_cells(variant) if c["status"] == "ok"]
+    train = [c for c in cells if c["shape"] == "train_4k"]
+    worst = min(train, key=lambda c: c["roofline"]["mfu_bound"])
+    coll = max(cells, key=lambda c: c["roofline"]["ici_s"] + c["roofline"]["dcn_s"])
+    rep = next((c for c in cells if c["shape"] == "long_500k"), None)
+    return {"worst_mfu": worst, "most_collective_bound": coll, "technique_representative": rep}
+
+
+def main():
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "pod16x16"
+    variant = sys.argv[2] if len(sys.argv) > 2 else "baseline"
+    table(variant, mesh)
+    print()
+    picks = pick_hillclimb_cells(variant)
+    for k, c in picks.items():
+        if c:
+            print(f"hillclimb[{k}]: {c['arch']} / {c['shape']} "
+                  f"(dom={c['roofline']['dominant']}, mfu<={c['roofline']['mfu_bound']:.3f})")
+
+
+if __name__ == "__main__":
+    main()

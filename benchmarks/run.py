@@ -1,0 +1,110 @@
+"""Benchmark driver: one section per paper figure + kernel/system benches.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run fig05 ...  # name filters
+
+Prints `name,metric,value` style rows; full CSVs land in artifacts/bench/.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def bench_kernels():
+    """Interpret-mode kernel sanity timings + allclose (not perf — CPU)."""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.kernels import ops, ref
+    from .common import emit
+
+    rows = []
+    rng = np.random.RandomState(0)
+    q = jnp.array(rng.randn(2, 256, 4, 64), jnp.float32)
+    t0 = time.perf_counter()
+    out = ops.flash_attention(q, q, q)
+    dt = time.perf_counter() - t0
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(8, 256, 64)
+    err = float(np.abs(np.asarray(out) -
+                       np.asarray(ref.attention_ref(fold(q), fold(q), fold(q))
+                                  .reshape(2, 4, 256, 64).transpose(0, 2, 1, 3))).max())
+    rows.append({"name": "flash_attention_interpret", "us_per_call": dt * 1e6,
+                 "derived": f"maxerr={err:.2e}"})
+    x = jnp.array(rng.randn(64, 2048), jnp.bfloat16)
+    sc = jnp.ones((2048,), jnp.bfloat16)
+    t0 = time.perf_counter()
+    ops.rmsnorm(x, sc)
+    rows.append({"name": "rmsnorm_interpret", "us_per_call": (time.perf_counter() - t0) * 1e6,
+                 "derived": ""})
+    emit("kernels", rows, ["name", "us_per_call", "derived"])
+    return rows
+
+
+def bench_train_step():
+    """Wall-time of a reduced-config train step per family (CPU reference)."""
+    import jax
+    from repro.configs import get_config
+    from repro.configs.base import ShapeConfig
+    from repro.models import build_model
+    from repro.optim import adamw
+    from repro.runtime import steps as rsteps
+    from .common import emit
+
+    rows = []
+    shape = ShapeConfig("bench", 64, 4, "train")
+    for arch in ("smollm-135m", "deepseek-moe-16b", "mamba2-2.7b", "zamba2-7b"):
+        cfg = get_config(arch).reduced()
+        model = build_model(cfg)
+        fn = jax.jit(rsteps.build_train_step(model, adamw.OptConfig()))
+        params = model.init(jax.random.PRNGKey(0))
+        opt = adamw.init_opt_state(params)
+        batch = model.make_batch(shape)
+        out = fn(params, opt, batch)
+        jax.block_until_ready(out[2]["loss"])
+        t0 = time.perf_counter()
+        for _ in range(3):
+            params, opt, m = fn(params, opt, batch)
+            jax.block_until_ready(m["loss"])
+        dt = (time.perf_counter() - t0) / 3
+        rows.append({"name": f"train_step/{arch}-reduced", "us_per_call": dt * 1e6,
+                     "derived": f"loss={float(m['loss']):.3f}"})
+    emit("train_step", rows, ["name", "us_per_call", "derived"])
+    return rows
+
+
+def bench_roofline():
+    from . import roofline
+    print("== roofline (single pod, baseline) ==")
+    roofline.table()
+    return []
+
+
+def main() -> None:
+    from .figures import ALL_FIGURES
+
+    filters = [a for a in sys.argv[1:] if not a.startswith("-")]
+    sections = dict(ALL_FIGURES)
+    sections["kernels"] = bench_kernels
+    sections["train_step"] = bench_train_step
+    sections["roofline"] = bench_roofline
+    failures = []
+    for name, fn in sections.items():
+        if filters and not any(f in name for f in filters):
+            continue
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+            print(f"[{name}: {time.time()-t0:.1f}s]", flush=True)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print("FAILED sections:", failures)
+        sys.exit(1)
+    print("\nall benchmark sections completed")
+
+
+if __name__ == "__main__":
+    main()

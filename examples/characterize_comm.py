@@ -1,0 +1,60 @@
+"""Interconnect characterization — the paper's measurement campaign, end to end.
+
+Runs the {mechanism} x {pattern} x {size} matrix on a forced-multi-device mesh
+(the intra-node analog), prints the derived observations, then projects the
+at-scale figures (9/10/13) from the calibrated cost models.
+
+  PYTHONPATH=src python examples/characterize_comm.py [--devices 8]
+
+NOTE: spawns itself with XLA_FLAGS to get multiple host devices.
+"""
+import argparse
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+
+def inner(n_devices: int):
+    import jax
+    from jax.sharding import AxisType
+
+    from repro.core.bench import print_records, write_csv
+    from repro.core.characterize import characterize_mesh, project_at_scale
+    from repro.core.noise import NoiseModel
+
+    mesh = jax.make_mesh((n_devices,), ("x",), axis_types=(AxisType.Auto,))
+    print(f"== measuring on {n_devices} host devices (ICI analog) ==")
+    report = characterize_mesh(mesh, "x", sizes=(1 << 12, 1 << 16, 1 << 20), iters=20)
+    print_records(report.records)
+    out = ROOT / "artifacts" / "bench"
+    out.mkdir(parents=True, exist_ok=True)
+    write_csv(str(out / "characterization.csv"), report.records)
+    print("\n== observations (local evidence) ==")
+    for k, v in report.observations.items():
+        print(f"  {k}: {v}")
+    print("\n== at-scale projection (Figs. 9/10/13 analog) ==")
+    for row in project_at_scale("tpu_v5e", noise=NoiseModel.tpu_dcn()):
+        print("  ", row)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--_inner", action="store_true")
+    args = ap.parse_args()
+    if args._inner:
+        inner(args.devices)
+        return
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={args.devices}"
+    env["PYTHONPATH"] = str(ROOT / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    sys.exit(subprocess.call([sys.executable, __file__, "--devices",
+                              str(args.devices), "--_inner"], env=env))
+
+
+if __name__ == "__main__":
+    main()

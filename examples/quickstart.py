@@ -1,0 +1,57 @@
+"""Quickstart: train a reduced LM for a few steps, checkpoint, resume, decode.
+
+  PYTHONPATH=src python examples/quickstart.py [--arch smollm-135m] [--steps 20]
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.optim import OptConfig
+from repro.runtime.serve import BatchedServer, ServeConfig
+from repro.runtime.train import Trainer, TrainConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--ckpt", default="artifacts/quickstart_ckpt")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    shape = ShapeConfig("quickstart", seq_len=64, global_batch=8, kind="train")
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M (reduced)")
+
+    trainer = Trainer(cfg, shape,
+                      OptConfig(peak_lr=1e-3, warmup_steps=5, decay_steps=args.steps),
+                      TrainConfig(steps=args.steps, ckpt_every=max(args.steps // 2, 1),
+                                  ckpt_dir=args.ckpt, log_every=5))
+    result = trainer.run()
+    losses = [m["loss"] for m in result["metrics"]]
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} over {len(losses)} steps")
+
+    # resume from the checkpoint (restart path)
+    trainer2 = Trainer(cfg, shape, OptConfig(peak_lr=1e-3, warmup_steps=5,
+                                             decay_steps=args.steps + 5),
+                       TrainConfig(steps=args.steps + 5, ckpt_every=0,
+                                   ckpt_dir=args.ckpt, log_every=5))
+    result2 = trainer2.run(resume=True)
+    print(f"resumed from step {result['final_step']} -> {result2['final_step']}")
+
+    # greedy decode with the trained weights
+    params, _, _ = trainer2.restore()
+    server = BatchedServer(cfg, max_seq=96, batch_size=2, params=params["params"]
+                           if isinstance(params, dict) and "params" in params else params)
+    prompts = np.random.RandomState(0).randint(0, cfg.vocab, (2, 8)).astype(np.int32)
+    out = server.generate(prompts, ServeConfig(max_new_tokens=8))
+    print("generated ids:", out[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

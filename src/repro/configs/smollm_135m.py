@@ -1,0 +1,8 @@
+"""smollm-135m [dense] — llama-arch small — hf:HuggingFaceTB/SmolLM-135M (hf)."""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="smollm-135m", family="dense",
+    n_layers=30, d_model=576, n_heads=9, n_kv_heads=3, d_ff=1536, vocab=49152,
+    mlp="swiglu", rope_theta=10000.0, tie_embeddings=True,
+))

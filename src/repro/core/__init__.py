@@ -1,0 +1,24 @@
+"""repro.core — the paper's contribution (interconnect characterization), TPU-native.
+
+Public API:
+  topology:    LinkGraph, TwoLevelTopology, make_paper_node_graphs, make_tpu_pod
+  costmodel:   CommModel, make_comm_model, crossover_bytes
+  collectives: ALL_REDUCE_ALGOS, ALL_TO_ALL_ALGOS, hierarchical_all_reduce, ...
+  bench:       time_fn, IterStats, BenchRecord, write_csv
+  noise:       NoiseModel, ServiceLevelArbiter, StragglerMitigator
+  autotune:    CollectivePolicy, default_policy
+  characterize: characterize_mesh, project_at_scale
+"""
+from . import hw
+from .topology import LinkGraph, TwoLevelTopology, make_paper_node_graphs, make_tpu_pod, make_tpu_multipod
+from .costmodel import CommModel, make_comm_model, crossover_bytes
+from .bench import IterStats, BenchRecord, time_fn, write_csv, gbps
+from .noise import NoiseModel, ServiceLevelArbiter, StragglerMitigator
+from .autotune import CollectivePolicy, default_policy
+
+__all__ = [
+    "hw", "LinkGraph", "TwoLevelTopology", "make_paper_node_graphs", "make_tpu_pod",
+    "make_tpu_multipod", "CommModel", "make_comm_model", "crossover_bytes",
+    "IterStats", "BenchRecord", "time_fn", "write_csv", "gbps", "NoiseModel",
+    "ServiceLevelArbiter", "StragglerMitigator", "CollectivePolicy", "default_policy",
+]

@@ -1,0 +1,152 @@
+"""Measurement harness (paper Sec. III-A methodology).
+
+* per-iteration timings (never aggregate-only — needed for the noise analysis,
+  Sec. VI), blocking on completion before stopping the clock;
+* collective timings are inherently max-across-ranks in single-controller JAX
+  (dispatch + block_until_ready covers all shards) — consistent with [23];
+* statistics: mean, median, IQR, p5/p95, min/max — exactly the paper's box plots;
+* goodput helpers using the paper's definitions:
+    p2p unidirectional goodput = bytes / (rtt/2)         (Sec. III-C)
+    collective goodput          = buffer bytes / runtime  (Sec. IV-A)
+* CSV artifacts matching the paper-artifact format (name, size, per-iter times).
+"""
+from __future__ import annotations
+
+import csv
+import dataclasses
+import statistics
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class IterStats:
+    """Distribution summary of per-iteration runtimes (seconds)."""
+
+    times: List[float]
+
+    @property
+    def mean(self) -> float:
+        return statistics.fmean(self.times)
+
+    @property
+    def median(self) -> float:
+        return statistics.median(self.times)
+
+    def percentile(self, p: float) -> float:
+        return float(np.percentile(self.times, p))
+
+    @property
+    def iqr(self) -> tuple:
+        return (self.percentile(25), self.percentile(75))
+
+    @property
+    def p5(self) -> float:
+        return self.percentile(5)
+
+    @property
+    def p95(self) -> float:
+        return self.percentile(95)
+
+    @property
+    def min(self) -> float:
+        return min(self.times)
+
+    @property
+    def max(self) -> float:
+        return max(self.times)
+
+    def summary(self) -> Dict[str, float]:
+        q1, q3 = self.iqr
+        return {
+            "mean_s": self.mean, "median_s": self.median, "q1_s": q1, "q3_s": q3,
+            "p5_s": self.p5, "p95_s": self.p95, "min_s": self.min, "max_s": self.max,
+            "iters": len(self.times),
+        }
+
+
+def iters_for_size(nbytes: int, lo: int = 100, hi: int = 1000) -> int:
+    """Paper: 100..1000 iterations depending on transfer size."""
+    if nbytes <= 64 * 1024:
+        return hi
+    if nbytes >= 64 * 1024 * 1024:
+        return lo
+    return 300
+
+
+def time_fn(fn: Callable, *args, iters: int = 100, warmup: int = 10) -> IterStats:
+    """Per-iteration wall times of an already-jitted callable.
+
+    Blocks on all outputs each iteration (the 'synchronize with the GPU before
+    stopping the timer' rule of Sec. III-A).  One-time costs (compilation = the
+    communicator-creation analog) are excluded via warmup.
+    """
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return IterStats(times)
+
+
+def p2p_goodput(nbytes: int, rtt_seconds: float) -> float:
+    """Unidirectional goodput: bytes / (rtt/2)  [bytes/s]."""
+    return nbytes / (rtt_seconds / 2.0)
+
+
+def collective_goodput(buffer_bytes: int, seconds: float) -> float:
+    return buffer_bytes / seconds
+
+
+def gbps(bytes_per_s: float) -> float:
+    """bytes/s -> Gb/s (the paper's reporting unit)."""
+    return bytes_per_s * 8.0 / 1e9
+
+
+@dataclasses.dataclass
+class BenchRecord:
+    name: str
+    mechanism: str
+    pattern: str
+    nbytes: int
+    n_endpoints: int
+    stats: IterStats
+    goodput_bytes_s: float
+    expected_bytes_s: Optional[float] = None
+
+    def row(self) -> Dict[str, object]:
+        r = {
+            "name": self.name, "mechanism": self.mechanism, "pattern": self.pattern,
+            "nbytes": self.nbytes, "n_endpoints": self.n_endpoints,
+            "goodput_gbps": gbps(self.goodput_bytes_s),
+            "expected_gbps": gbps(self.expected_bytes_s) if self.expected_bytes_s else "",
+        }
+        r.update(self.stats.summary())
+        return r
+
+
+def write_csv(path: str, records: Sequence[BenchRecord]) -> None:
+    if not records:
+        return
+    rows = [r.row() for r in records]
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+        w.writeheader()
+        w.writerows(rows)
+
+
+def print_records(records: Sequence[BenchRecord]) -> None:
+    for r in records:
+        exp = f" expected={gbps(r.expected_bytes_s):8.1f}" if r.expected_bytes_s else ""
+        print(
+            f"{r.name:32s} {r.mechanism:12s} {r.pattern:10s} n={r.n_endpoints:<5d} "
+            f"{r.nbytes:>12d}B  {r.stats.median*1e6:10.1f}us  "
+            f"goodput={gbps(r.goodput_bytes_s):8.2f} Gb/s{exp}"
+        )

@@ -1,0 +1,323 @@
+"""Explicit collective algorithms over jax.lax.ppermute / all_to_all (shard_map).
+
+The paper's "mechanism axis" (trivial staging / device-device copy / *CCL /
+GPU-aware MPI), TPU-native:
+
+  * XLA built-in collectives (``psum``/``all_gather``/``all_to_all``) — the
+    vendor-tuned path, the *CCL analog;
+  * the explicit algorithms here — hand-scheduled point-to-point over
+    ``ppermute``, the GPU-aware-MPI / device-copy analog.  Algorithm choice per
+    message size is exactly the tuning surface of the paper's Obs. 1 / Fig. 11;
+  * host staging — see ``staged_host_all_reduce`` (outside jit; benchmark only).
+
+Every function operates on the *local shard view* inside ``jax.shard_map`` over a
+named axis.  All are validated against jnp oracles in tests/test_collectives.py.
+
+Algorithms:
+  ring_reduce_scatter / ring_all_gather / ring_all_reduce      bandwidth-optimal
+  bidir_ring_all_reduce                                        2 counter-rotating rings
+  rabenseifner_all_reduce (recursive halving + doubling)       bw-optimal, log-latency
+  recursive_doubling_all_reduce                                latency-optimal
+  tree_all_reduce (binomial reduce + broadcast)                latency-optimal small n
+  one_shot_all_reduce (all-gather + local reduce)              device-copy analog
+  all_to_all_direct / all_to_all_pairwise                      XLA vs chunk-bounded
+  hierarchical_all_reduce                                      ICI RS -> DCN AR -> ICI AG
+  ping_pong                                                    p2p latency/goodput probe
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _axis_n(axis: str) -> int:
+    return lax.axis_size(axis)
+
+
+def _ring_perm(n: int, shift: int = 1):
+    return [(i, (i + shift) % n) for i in range(n)]
+
+
+def _pad_to(x: jnp.ndarray, multiple: int):
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % multiple
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat, pad
+
+
+# --------------------------------------------------------------------------- ring
+def ring_reduce_scatter(x: jnp.ndarray, axis: str) -> jnp.ndarray:
+    """Returns this rank's reduced chunk (flat, len = padded_size/n)."""
+    n = _axis_n(axis)
+    idx = lax.axis_index(axis)
+    flat, _ = _pad_to(x, n)
+    chunks = flat.reshape(n, -1)
+    # Step s: every rank sends the chunk it currently accumulates for rank
+    # (idx - s - 1) and receives+accumulates the one for (idx - s)... canonical:
+    # start by sending chunk (idx+ n -1)%n? Use the textbook schedule:
+    #   after n-1 steps rank r owns sum of chunk r.
+    buf = jnp.take(chunks, (idx + n - 1) % n, axis=0)
+    for s in range(n - 1):
+        buf = lax.ppermute(buf, axis, _ring_perm(n, 1))
+        take = (idx + n - 2 - s) % n
+        if s < n - 2:
+            buf = buf + jnp.take(chunks, take, axis=0)
+        else:
+            buf = buf + jnp.take(chunks, idx, axis=0)
+    return buf
+
+
+def ring_all_gather(chunk: jnp.ndarray, axis: str) -> jnp.ndarray:
+    """Each rank contributes `chunk`; returns (n, chunk_shape) gathered in rank order."""
+    n = _axis_n(axis)
+    idx = lax.axis_index(axis)
+    out = jnp.zeros((n,) + chunk.shape, chunk.dtype)
+    out = lax.dynamic_update_index_in_dim(out, chunk, idx, 0)
+    buf = chunk
+    for s in range(n - 1):
+        buf = lax.ppermute(buf, axis, _ring_perm(n, 1))
+        src = (idx - s - 1) % n
+        out = lax.dynamic_update_index_in_dim(out, buf, src, 0)
+    return out
+
+
+def ring_all_reduce(x: jnp.ndarray, axis: str) -> jnp.ndarray:
+    """Bandwidth-optimal ring: reduce-scatter + all-gather, 2(n-1)/n bytes/rank."""
+    n = _axis_n(axis)
+    if n == 1:
+        return x
+    chunk = ring_reduce_scatter(x, axis)
+    full = ring_all_gather(chunk, axis).reshape(-1)
+    return full[: x.size].reshape(x.shape).astype(x.dtype)
+
+
+def bidir_ring_all_reduce(x: jnp.ndarray, axis: str) -> jnp.ndarray:
+    """Two counter-rotating rings, each carrying half the buffer — uses both link
+    directions (the paper's LUMI bidirectional-ring observation, Sec. IV-C)."""
+    n = _axis_n(axis)
+    if n == 1:
+        return x
+    flat, pad = _pad_to(x, 2)
+    half = flat.shape[0] // 2
+    a, b = flat[:half], flat[half:]
+
+    idx = lax.axis_index(axis)
+
+    def one_ring(v, shift):
+        nn = _axis_n(axis)
+        fl, _ = _pad_to(v, nn)
+        chunks = fl.reshape(nn, -1)
+        buf = jnp.take(chunks, (idx + nn - 1) % nn if shift == 1 else (idx + 1) % nn, axis=0)
+        for s in range(nn - 1):
+            buf = lax.ppermute(buf, axis, _ring_perm(nn, shift))
+            if shift == 1:
+                take = (idx + nn - 2 - s) % nn if s < nn - 2 else idx
+            else:
+                take = (idx + 2 + s) % nn if s < nn - 2 else idx
+            buf = buf + jnp.take(chunks, take, axis=0)
+        gathered = ring_all_gather_dir(buf, axis, shift)
+        return gathered.reshape(-1)[: v.size]
+
+    ra = one_ring(a, 1)
+    rb = one_ring(b, -1)
+    out = jnp.concatenate([ra, rb])
+    return out[: x.size].reshape(x.shape).astype(x.dtype)
+
+
+def ring_all_gather_dir(chunk: jnp.ndarray, axis: str, shift: int) -> jnp.ndarray:
+    n = _axis_n(axis)
+    idx = lax.axis_index(axis)
+    out = jnp.zeros((n,) + chunk.shape, chunk.dtype)
+    out = lax.dynamic_update_index_in_dim(out, chunk, idx, 0)
+    buf = chunk
+    for s in range(n - 1):
+        buf = lax.ppermute(buf, axis, _ring_perm(n, shift))
+        src = (idx - shift * (s + 1)) % n
+        out = lax.dynamic_update_index_in_dim(out, buf, src, 0)
+    return out
+
+
+# ----------------------------------------------------------------- rabenseifner
+def rabenseifner_all_reduce(x: jnp.ndarray, axis: str) -> jnp.ndarray:
+    """Recursive halving reduce-scatter + recursive doubling all-gather
+    (Rabenseifner [33]); n must be a power of two.  2(n-1)/n bytes, 2 log2 n steps."""
+    n = _axis_n(axis)
+    if n == 1:
+        return x
+    assert n & (n - 1) == 0, "rabenseifner requires power-of-two axis"
+    idx = lax.axis_index(axis)
+    flat, _ = _pad_to(x, n)
+    m = flat.shape[0]
+    work = flat
+    lo = jnp.zeros((), jnp.int32)
+    size = m
+    dists = []
+    d = n // 2
+    while d >= 1:
+        dists.append(d)
+        d //= 2
+    # reduce-scatter by recursive halving
+    for d in dists:
+        half = size // 2
+        perm = [(i, i ^ d) for i in range(n)]
+        keep_low = (idx & d) == 0
+        send_start = lo + jnp.where(keep_low, half, 0)
+        keep_start = lo + jnp.where(keep_low, 0, half)
+        send = lax.dynamic_slice(work, (send_start,), (half,))
+        recv = lax.ppermute(send, axis, perm)
+        kept = lax.dynamic_slice(work, (keep_start,), (half,)) + recv
+        work = lax.dynamic_update_slice(work, kept, (keep_start,))
+        lo = keep_start
+        size = half
+    # all-gather by recursive doubling (reverse order)
+    for d in reversed(dists):
+        perm = [(i, i ^ d) for i in range(n)]
+        send = lax.dynamic_slice(work, (lo,), (size,))
+        recv = lax.ppermute(send, axis, perm)
+        mine_high = (idx & d) != 0
+        recv_start = lo + jnp.where(mine_high, -size, size)
+        work = lax.dynamic_update_slice(work, recv, (recv_start,))
+        lo = lo - jnp.where(mine_high, size, 0)
+        size = size * 2
+    return work[: x.size].reshape(x.shape).astype(x.dtype)
+
+
+# ------------------------------------------------------- latency-optimal family
+def recursive_doubling_all_reduce(x: jnp.ndarray, axis: str) -> jnp.ndarray:
+    """log2(n) full-buffer exchanges — latency-optimal for small messages."""
+    n = _axis_n(axis)
+    if n == 1:
+        return x
+    assert n & (n - 1) == 0, "recursive doubling requires power-of-two axis"
+    acc = x
+    d = 1
+    while d < n:
+        perm = [(i, i ^ d) for i in range(n)]
+        acc = acc + lax.ppermute(acc, axis, perm)
+        d *= 2
+    return acc
+
+
+def tree_all_reduce(x: jnp.ndarray, axis: str) -> jnp.ndarray:
+    """Binomial-tree reduce to rank 0 followed by binomial broadcast."""
+    n = _axis_n(axis)
+    if n == 1:
+        return x
+    assert n & (n - 1) == 0
+    idx = lax.axis_index(axis)
+    acc = x
+    d = 1
+    while d < n:  # reduce
+        perm = [(i, i - d) for i in range(n) if i % (2 * d) == d]
+        recv = lax.ppermute(acc, axis, perm)
+        is_recv = (idx % (2 * d)) == 0
+        acc = jnp.where(is_recv, acc + recv, acc)
+        d *= 2
+    d = n // 2
+    while d >= 1:  # broadcast
+        perm = [(i, i + d) for i in range(n) if i % (2 * d) == 0]
+        recv = lax.ppermute(acc, axis, perm)
+        is_recv = (idx % (2 * d)) == d
+        acc = jnp.where(is_recv, recv, acc)
+        d //= 2
+    return acc
+
+
+def one_shot_all_reduce(x: jnp.ndarray, axis: str) -> jnp.ndarray:
+    """All-gather everything, reduce locally — the explicit device-device-copy
+    analog (paper Sec. IV-D 'reduction on GPU 0 + broadcast' without pipelining)."""
+    g = lax.all_gather(x, axis)  # (n, ...)
+    return jnp.sum(g, axis=0).astype(x.dtype)
+
+
+def xla_all_reduce(x: jnp.ndarray, axis: str) -> jnp.ndarray:
+    """The *CCL analog: let the platform library schedule it."""
+    return lax.psum(x, axis)
+
+
+# ------------------------------------------------------------------- all-to-all
+def all_to_all_direct(x: jnp.ndarray, axis: str) -> jnp.ndarray:
+    """XLA all_to_all (the *CCL analog).  x: (n*k, ...) local rows; row block j
+    goes to rank j; returns the n received blocks concatenated."""
+    return lax.all_to_all(x, axis, split_axis=0, concat_axis=0, tiled=True)
+
+
+def all_to_all_pairwise(x: jnp.ndarray, axis: str, chunk_ranks: int = 0) -> jnp.ndarray:
+    """Pairwise-exchange alltoall over ppermute rotations: n-1 steps, one peer in
+    flight per step — the bounded-connection-state fix for the paper's Obs. 7
+    (*CCL alltoall instability beyond 512 endpoints).  Optionally processes peers
+    in groups of `chunk_ranks` (0 = all, still one rotation at a time)."""
+    n = _axis_n(axis)
+    idx = lax.axis_index(axis)
+    rows = x.shape[0]
+    assert rows % n == 0
+    k = rows // n
+    blocks = x.reshape(n, k, *x.shape[1:])
+    out = jnp.zeros_like(blocks)
+    own = jnp.take(blocks, idx, axis=0)
+    out = lax.dynamic_update_index_in_dim(out, own, idx, 0)
+    for s in range(1, n):
+        # send the block destined to rank (idx + s); it travels s hops... use a
+        # direct permutation instead: perm sending to (i+s) delivers in one step.
+        perm = [(i, (i + s) % n) for i in range(n)]
+        send = jnp.take(blocks, (idx + s) % n, axis=0)
+        recv = lax.ppermute(send, axis, perm)  # from rank (idx - s)
+        out = lax.dynamic_update_index_in_dim(out, recv, (idx - s) % n, 0)
+    return out.reshape(x.shape)
+
+
+# ------------------------------------------------------------------ hierarchical
+def hierarchical_all_reduce(x: jnp.ndarray, ici_axis: str, dcn_axis: str) -> jnp.ndarray:
+    """Multi-pod allreduce: intra-pod reduce-scatter (ICI) -> inter-pod allreduce of
+    the scattered shard (DCN, 1/n_ici of the bytes) -> intra-pod all-gather (ICI).
+    This is the bandwidth-correct schedule when DCN << ICI (DESIGN.md Sec. 5)."""
+    n = _axis_n(ici_axis)
+    chunk = ring_reduce_scatter(x, ici_axis)
+    chunk = lax.psum(chunk, dcn_axis)
+    full = ring_all_gather(chunk, ici_axis).reshape(-1)
+    return full[: x.size].reshape(x.shape).astype(x.dtype)
+
+
+# ------------------------------------------------------------------------- p2p
+def ping_pong(x: jnp.ndarray, axis: str, a: int = 0, b: int = 1, rounds: int = 1) -> jnp.ndarray:
+    """Bounce a buffer a->b->a `rounds` times (the paper's p2p probe, Sec. III-C)."""
+    n = _axis_n(axis)
+    buf = x
+    for _ in range(rounds):
+        buf = lax.ppermute(buf, axis, [(a, b)])
+        buf = lax.ppermute(buf, axis, [(b, a)])
+    return buf
+
+
+# ------------------------------------------------------------------- host path
+def staged_host_all_reduce(shards: Sequence) -> list:
+    """Trivial staging baseline (paper Sec. III-A): device->host copies, host-side
+    reduction, host->device copies.  Store-and-forward, no pipelining; not jittable
+    by design — used by benchmarks only."""
+    import numpy as np
+
+    host = [np.asarray(jax.device_get(s)) for s in shards]
+    total = functools.reduce(lambda a_, b_: a_ + b_, host)
+    return [jax.device_put(total, s.devices().pop() if hasattr(s, "devices") else None)
+            for s in shards]
+
+
+ALL_REDUCE_ALGOS = {
+    "xla": xla_all_reduce,
+    "ring": ring_all_reduce,
+    "bidir_ring": bidir_ring_all_reduce,
+    "rabenseifner": rabenseifner_all_reduce,
+    "recursive_doubling": recursive_doubling_all_reduce,
+    "tree": tree_all_reduce,
+    "one_shot": one_shot_all_reduce,
+}
+
+ALL_TO_ALL_ALGOS = {
+    "xla": all_to_all_direct,
+    "pairwise": all_to_all_pairwise,
+}

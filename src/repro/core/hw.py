@@ -1,0 +1,143 @@
+"""Hardware profiles: the paper's three systems + the TPU deployment target.
+
+All bandwidths are stored in **bytes/second unidirectional** internally.  The paper
+reports Gb/s (bits); helpers convert.  Latencies in seconds.
+
+Paper sources (Table I, Figs. 1-2, Secs. II-V):
+  - Alps:      4x GH200/node, NVLink4, 6x200 Gb/s links per GPU pair (1.2 Tb/s/pair),
+               1x Cassini-1 200 Gb/s NIC per GPU, Slingshot-11 Dragonfly.
+  - Leonardo:  4x A100/node, NVLink3, 4x200 Gb/s per pair (800 Gb/s/pair),
+               4x100 Gb/s IB HDR ports per node (1 per GPU), Dragonfly+.
+  - LUMI:      8 GCDs/node (4x MI250X), 1-4x 400 Gb/s IF links per GCD pair,
+               1x Cassini-1 200 Gb/s NIC per module (100 Gb/s per GCD), Dragonfly.
+
+TPU v5e target (per the roofline brief): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI, 4 ICI links per chip (2-D torus, 16x16 = 256-chip pod),
+inter-pod DCN modeled at 25 Gb/s/chip (200 Gb/s host NIC shared by 8 chips).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+def gbit(x: float) -> float:
+    """Gigabits/s -> bytes/s."""
+    return x * 1e9 / 8.0
+
+
+def gbyte(x: float) -> float:
+    """Gigabytes/s -> bytes/s."""
+    return x * 1e9
+
+
+@dataclasses.dataclass(frozen=True)
+class MechanismLatency:
+    """Small-message one-way latency (s) per data-movement mechanism (paper Fig. 3/7).
+
+    The GDRCopy / CPU-load-store tier differences of Sec. III-C collapse into these
+    constants on TPU (hosts cannot load/store HBM): see DESIGN.md 'what does not
+    transfer'.
+    """
+    staging: float
+    device_copy: float
+    ccl: float
+    mpi: float
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemProfile:
+    name: str
+    endpoints_per_node: int
+    # intra-node
+    pair_bw: float                 # best-pair unidirectional bytes/s
+    link_bw: float                 # single intra-node link, bytes/s
+    links_per_endpoint: int        # simultaneously usable links
+    host_staging_bw: float         # device<->host effective bytes/s (trivial staging)
+    intra_latency: MechanismLatency
+    # inter-node
+    nic_bw: float                  # per-endpoint injection bytes/s
+    inter_latency_same_switch: float
+    inter_latency_same_group: float
+    inter_latency_diff_group: float
+    # noise (paper Sec. VI, Leonardo observations; 0 => structurally isolated)
+    noise_goodput_frac_diff_group: float   # mean goodput multiplier across groups
+    noise_lognorm_sigma: float             # latency tail heaviness
+    compute_peak: float = 0.0              # FLOP/s (bf16) — 0 for paper systems
+    hbm_bw: float = 0.0
+
+
+ALPS = SystemProfile(
+    name="alps",
+    endpoints_per_node=4,
+    pair_bw=gbit(1200.0),          # 6 x 200 Gb/s NVLink4
+    link_bw=gbit(200.0),
+    links_per_endpoint=18,         # 6 links x 3 peers
+    host_staging_bw=gbit(300.0),
+    intra_latency=MechanismLatency(staging=12e-6, device_copy=4e-6, ccl=5e-6, mpi=5e-6),
+    nic_bw=gbit(200.0),
+    inter_latency_same_switch=4.33e-6,
+    inter_latency_same_group=4.9e-6,
+    inter_latency_diff_group=5.56e-6,   # +28% (Obs. 6)
+    noise_goodput_frac_diff_group=0.99,  # -1% goodput (Obs. 6)
+    noise_lognorm_sigma=0.05,
+)
+
+LEONARDO = SystemProfile(
+    name="leonardo",
+    endpoints_per_node=4,
+    pair_bw=gbit(800.0),           # 4 x 200 Gb/s NVLink3
+    link_bw=gbit(200.0),
+    links_per_endpoint=12,
+    host_staging_bw=gbit(256.0),   # PCIe Gen4 x16
+    intra_latency=MechanismLatency(staging=10e-6, device_copy=3e-6, ccl=6e-6, mpi=2.5e-6),
+    nic_bw=gbit(100.0),
+    inter_latency_same_switch=2.03e-6,
+    inter_latency_same_group=3.0e-6,
+    inter_latency_diff_group=4.23e-6,   # 2x (Obs. 6)
+    noise_goodput_frac_diff_group=0.83,  # 395 -> 328 Gb/s (Obs. 6)
+    noise_lognorm_sigma=0.45,            # p95 > 8us, max 132us tail
+)
+
+LUMI = SystemProfile(
+    name="lumi",
+    endpoints_per_node=8,          # 8 GCDs
+    pair_bw=gbit(1600.0),          # GCD0<->1: 4 x 400 Gb/s IF
+    link_bw=gbit(400.0),
+    links_per_endpoint=6,          # 4 in-package + 2 external
+    host_staging_bw=gbit(288.0),   # IF host link per GCD
+    intra_latency=MechanismLatency(staging=9e-6, device_copy=4e-6, ccl=9e-6, mpi=3e-6),
+    nic_bw=gbit(100.0),            # 200 Gb/s NIC shared by 2 GCDs
+    inter_latency_same_switch=3.66e-6,
+    inter_latency_same_group=4.2e-6,
+    inter_latency_diff_group=4.7e-6,
+    noise_goodput_frac_diff_group=0.99,
+    noise_lognorm_sigma=0.05,
+)
+
+TPU_V5E = SystemProfile(
+    name="tpu_v5e",
+    endpoints_per_node=256,        # one pod slice = the "node" analog (single ICI domain)
+    pair_bw=gbyte(50.0),           # one ICI link
+    link_bw=gbyte(50.0),
+    links_per_endpoint=4,          # 2-D torus: +x,-x,+y,-y
+    host_staging_bw=gbyte(16.0),   # PCIe to host
+    intra_latency=MechanismLatency(staging=20e-6, device_copy=1e-6, ccl=1e-6, mpi=1e-6),
+    nic_bw=gbit(25.0),             # DCN: 200 Gb/s host NIC / 8 chips
+    inter_latency_same_switch=10e-6,
+    inter_latency_same_group=15e-6,
+    inter_latency_diff_group=25e-6,
+    noise_goodput_frac_diff_group=0.90,  # DCN is shared; ICI is single-tenant
+    noise_lognorm_sigma=0.30,
+    compute_peak=197e12,
+    hbm_bw=819e9,
+)
+
+SYSTEMS: Dict[str, SystemProfile] = {p.name: p for p in (ALPS, LEONARDO, LUMI, TPU_V5E)}
+
+# Roofline constants for the dry-run analysis (TPU v5e, per the brief).
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_LINK_BW = 50e9
+ICI_LINKS = 4
+DCN_BW_PER_CHIP = gbit(25.0)

@@ -1,0 +1,128 @@
+"""Data pipeline: deterministic synthetic LM tokens + binary token-file reader.
+
+Restart semantics (fault tolerance): batches are a pure function of (seed, step),
+so a restore-from-checkpoint replays the exact stream with zero bookkeeping.
+Multi-host sharding: `host_slice` selects this host's rows; under the
+single-controller container it is the identity.
+
+`PrefetchIterator` double-buffers batch construction on a background thread (the
+host-side input pipeline never blocks the device step).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from pathlib import Path
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from ..configs.base import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass
+class DataConfig:
+    seed: int = 1234
+    host_index: int = 0
+    host_count: int = 1
+
+
+class SyntheticLM:
+    """Deterministic random-token batches shaped per (model, shape) pair,
+    including the stub modality frontends (VLM patch embeddings, audio
+    codebooks) — see DESIGN.md Sec. 4."""
+
+    def __init__(self, model_cfg: ModelConfig, shape: ShapeConfig,
+                 cfg: Optional[DataConfig] = None):
+        self.m = model_cfg
+        self.shape = shape
+        self.cfg = cfg or DataConfig()
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.Generator(np.random.PCG64(hash((self.cfg.seed, step)) % (2**63)))
+        B, S = self.shape.global_batch, self.shape.seq_len
+        B_local = B // self.cfg.host_count
+        lo = self.cfg.host_index * B_local
+        out: Dict[str, np.ndarray] = {}
+        if self.m.family == "vlm":
+            toks = rng.integers(0, self.m.vocab, (B, S - self.m.n_img_tokens), dtype=np.int32)
+            img = rng.standard_normal((B, self.m.n_img_tokens, self.m.d_model), dtype=np.float32)
+            out = {"tokens": toks[lo:lo + B_local],
+                   "img_embeds": img[lo:lo + B_local].astype(np.float32)}
+        elif self.m.n_codebooks:
+            toks = rng.integers(0, self.m.vocab, (B, S, self.m.n_codebooks), dtype=np.int32)
+            out = {"tokens": toks[lo:lo + B_local]}
+        else:
+            toks = rng.integers(0, self.m.vocab, (B, S), dtype=np.int32)
+            out = {"tokens": toks[lo:lo + B_local]}
+        return out
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+class TokenFileDataset:
+    """Binary uint16/uint32 token files (memmap) with epoch-deterministic
+    shuffled windows — the 'real data' path."""
+
+    def __init__(self, path: str, model_cfg: ModelConfig, shape: ShapeConfig,
+                 dtype=np.uint16, cfg: Optional[DataConfig] = None):
+        self.tokens = np.memmap(path, dtype=dtype, mode="r")
+        self.m = model_cfg
+        self.shape = shape
+        self.cfg = cfg or DataConfig()
+        self.n_windows = (len(self.tokens) - 1) // shape.seq_len
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        B, S = self.shape.global_batch, self.shape.seq_len
+        epoch = (step * B) // max(self.n_windows, 1)
+        rng = np.random.Generator(np.random.PCG64(hash((self.cfg.seed, epoch)) % (2**63)))
+        perm = rng.permutation(self.n_windows)
+        idx = [(step * B + i) % self.n_windows for i in range(B)]
+        starts = perm[idx] * S
+        batch = np.stack([self.tokens[s:s + S].astype(np.int32) for s in starts])
+        B_local = B // self.cfg.host_count
+        lo = self.cfg.host_index * B_local
+        return {"tokens": batch[lo:lo + B_local]}
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+class PrefetchIterator:
+    """Background-thread prefetch (depth-bounded)."""
+
+    def __init__(self, source, start_step: int = 0, depth: int = 2):
+        self.source = source
+        self.q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._step = start_step
+
+        def worker():
+            s = start_step
+            while not self._stop.is_set():
+                try:
+                    self.q.put((s, self.source.batch_at(s)), timeout=0.5)
+                    s += 1
+                except queue.Full:
+                    continue
+
+        self._t = threading.Thread(target=worker, daemon=True)
+        self._t.start()
+
+    def __next__(self):
+        step, batch = self.q.get()
+        return step, batch
+
+    def __iter__(self):
+        return self
+
+    def close(self):
+        self._stop.set()

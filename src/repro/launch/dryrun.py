@@ -1,0 +1,236 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x mesh)
+cell against the production meshes and extract the roofline terms.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out artifacts/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --shape train_4k --mesh both
+
+Each cell writes a JSON artifact with memory_analysis, cost_analysis, collective
+wire bytes (ICI vs DCN), roofline terms, and the dominant bottleneck.
+The 512 forced host devices exist ONLY in this process (see the module's first
+two lines); smoke tests and benchmarks see the real device count.
+"""
+import argparse
+import dataclasses
+import gc
+import json
+import math
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import SHAPES, ModelConfig, ShapeConfig, get_config, list_configs, shape_applicable
+from ..core import hw
+from ..models.model import build_model
+from ..optim import adamw
+from ..runtime import steps as rsteps
+from . import hlo_analysis
+from .mesh import make_production_mesh
+
+ARTIFACTS = Path("artifacts/dryrun")
+
+
+def auto_microbatches(cfg: ModelConfig, shape: ShapeConfig, n_devices: int,
+                      target_bytes: float = 4e9) -> int:
+    """Pick grad-accumulation depth so rematted activations fit (DESIGN.md Sec. 7).
+
+    Activations are sharded over the batch axes only (model-axis dims are local),
+    so the per-device estimate divides by batch shards = n_devices / 16.
+    """
+    if shape.kind != "train":
+        return 1
+    batch_shards = max(n_devices // 16, 1)
+    # never split below one sample per batch shard: a microbatch smaller than the
+    # batch axes replicates compute across them (measured: 4x useless flops on
+    # mistral-large at mb=64)
+    mb_max = max(shape.global_batch // batch_shards, 1)
+    d_eff = cfg.d_model if cfg.family != "ssm" else cfg.d_inner + cfg.d_model
+    for mb in (1, 2, 4, 8, 16, 32, 64):
+        if mb > mb_max:
+            break
+        if shape.global_batch % mb:
+            continue
+        b_micro = shape.global_batch / mb / batch_shards
+        act = cfg.n_layers * b_micro * shape.seq_len * d_eff * 2
+        # logits of one microbatch (fp32, vocab/16 per device) live once
+        logits = b_micro * shape.seq_len * (cfg.vocab / 16) * 4 * 3
+        if act + logits <= target_bytes:
+            return mb
+    return mb_max
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6 N D (train) / 2 N D (inference), N = active params."""
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             microbatches: int = 0, out_dir: Path = ARTIFACTS,
+             variant: str = "baseline", cfg_override=None, seq_axes=None,
+             overrides=None) -> dict:
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "variant": variant}
+    if not ok:
+        cell.update(status="skipped", reason=why)
+        return cell
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = math.prod(mesh.shape.values())
+    model = build_model(cfg, mesh, seq_axes=seq_axes, overrides=overrides)
+    mb = microbatches or auto_microbatches(cfg, shape, n_dev)
+    t0 = time.time()
+    try:
+        if shape.kind == "train":
+            bundle = rsteps.train_step_bundle(model, shape, adamw.OptConfig(), microbatches=mb)
+            args = (model.abstract_params(), adamw.abstract_opt_state(model.abstract_params()),
+                    model.input_specs(shape))
+        elif shape.kind == "prefill":
+            bundle = rsteps.prefill_step_bundle(model, shape)
+            args = (model.abstract_params(), model.input_specs(shape),
+                    model.abstract_cache(shape))
+        else:
+            bundle = rsteps.decode_step_bundle(model, shape)
+            ins = model.input_specs(shape)
+            args = (model.abstract_params(), model.abstract_cache(shape),
+                    ins["tokens"], ins["pos"])
+        with mesh:
+            jitted = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                             out_shardings=bundle.out_shardings,
+                             donate_argnums=bundle.donate_argnums)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        pod_stride = mesh.shape["data"] * mesh.shape["model"] if multi_pod else 0
+        colls = hlo_analysis.analyze_collectives(hlo, pod_stride=pod_stride)
+        # XLA cost_analysis counts while bodies once (scan under-reporting):
+        # use the trip-weighted HLO pass; keep XLA's numbers for reference.
+        parsed = hlo_analysis.analyze_cost(hlo)
+        flops = float(parsed.flops)
+        bytes_acc = float(parsed.bytes)
+        xla_flops = float(ca.get("flops", 0.0))
+        xla_bytes = float(ca.get("bytes accessed", 0.0))
+        mf = model_flops(cfg, shape) / n_dev
+        t_comp = flops / hw.PEAK_FLOPS_BF16
+        t_mem = bytes_acc / hw.HBM_BW
+        t_ici = colls.ici_bytes / (hw.ICI_LINK_BW * hw.ICI_LINKS)
+        t_dcn = colls.dcn_bytes / hw.DCN_BW_PER_CHIP
+        terms = {"compute_s": t_comp, "memory_s": t_mem, "ici_s": t_ici, "dcn_s": t_dcn}
+        dominant = max(terms, key=terms.get)
+        step_s = max(terms.values())
+        cell.update(
+            status="ok",
+            microbatches=mb,
+            devices=n_dev,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory=dict(
+                argument_bytes=ma.argument_size_in_bytes,
+                output_bytes=ma.output_size_in_bytes,
+                temp_bytes=ma.temp_size_in_bytes,
+                alias_bytes=ma.alias_size_in_bytes,
+                peak_per_device=ma.argument_size_in_bytes + ma.temp_size_in_bytes,
+                fits_16g=(ma.argument_size_in_bytes + ma.temp_size_in_bytes) < 16e9,
+            ),
+            cost=dict(flops_per_device=flops, bytes_per_device=bytes_acc,
+                      xla_flops_unweighted=xla_flops, xla_bytes_unweighted=xla_bytes,
+                      bytes_by_kind=parsed.bytes_by_kind,
+                      top_byte_lines=sorted(parsed.top_lines, key=lambda t: -t[0])[:25]),
+            collectives=colls.row(),
+            roofline=dict(
+                **terms,
+                dominant=dominant,
+                step_time_bound_s=step_s,
+                model_flops_per_device=mf,
+                useful_compute_ratio=(mf / flops if flops else 0.0),
+                mfu_bound=(mf / hw.PEAK_FLOPS_BF16) / step_s if step_s else 0.0,
+            ),
+        )
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        cell.update(status="error", error=f"{type(e).__name__}: {e}",
+                    trace=traceback.format_exc()[-2000:])
+    finally:
+        gc.collect()
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / f"{arch}__{shape_name}__{mesh_name}__{variant}.json"
+    path.write_text(json.dumps(cell, indent=2, default=float))
+    return cell
+
+
+def summarize(cell: dict) -> str:
+    if cell.get("status") == "skipped":
+        return f"{cell['arch']:>20s} {cell['shape']:<12s} {cell['mesh']:<11s} SKIP  ({cell['reason'][:60]})"
+    if cell.get("status") != "ok":
+        return f"{cell['arch']:>20s} {cell['shape']:<12s} {cell['mesh']:<11s} ERROR {cell.get('error', '')[:90]}"
+    r = cell["roofline"]
+    m = cell["memory"]
+    return (f"{cell['arch']:>20s} {cell['shape']:<12s} {cell['mesh']:<11s} "
+            f"mb={cell['microbatches']:<3d} mem={m['peak_per_device']/1e9:6.2f}GB "
+            f"fits={str(m['fits_16g'])[0]} comp={r['compute_s']*1e3:9.2f}ms "
+            f"memt={r['memory_s']*1e3:9.2f}ms ici={r['ici_s']*1e3:8.2f}ms "
+            f"dcn={r['dcn_s']*1e3:8.2f}ms dom={r['dominant']:<9s} "
+            f"useful={r['useful_compute_ratio']:5.2f} mfu<={r['mfu_bound']:5.2f} "
+            f"[compile {cell['compile_s']:.0f}s]")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=str(ARTIFACTS))
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    archs = [args.arch] if args.arch else list_configs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+    if not (args.all or args.arch):
+        ap.error("pass --all or --arch")
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                path = out_dir / f"{arch}__{shape}__{mesh_name}__{args.variant}.json"
+                if args.skip_existing and path.exists():
+                    cell = json.loads(path.read_text())
+                    if cell.get("status") in ("ok", "skipped"):
+                        print(summarize(cell), "(cached)", flush=True)
+                        results.append(cell)
+                        continue
+                cell = run_cell(arch, shape, mp, args.microbatches, out_dir, args.variant)
+                print(summarize(cell), flush=True)
+                results.append(cell)
+    n_ok = sum(1 for c in results if c["status"] == "ok")
+    n_skip = sum(1 for c in results if c["status"] == "skipped")
+    n_err = len(results) - n_ok - n_skip
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped (documented), {n_err} errors")
+    sys.exit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

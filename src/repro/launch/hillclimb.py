@@ -1,0 +1,101 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: the three selected cells, one variant per iteration.
+
+Each iteration is a (hypothesis, change) pair from EXPERIMENTS.md §Perf; this
+script recompiles the cell and records the roofline deltas as variant JSONs
+next to the baselines.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb [cellA|cellB|cellC ...]
+"""
+import dataclasses
+import json
+import sys
+
+from ..configs.base import get_config
+from .dryrun import run_cell, summarize
+
+
+def cell_a():
+    """mistral-large-123b / train_4k — most collective-bound.
+
+    it1 mb16:    cap microbatches at DP degree (b_micro >= 1 per shard).
+                 Hypothesis: baseline mb=64 replicates each microbatch 4x across
+                 the batch shards => ~4x useless flops and 4x FSDP all-gather
+                 traffic.  Predict flops/dev 1.28e16 -> ~3.5e15, ici ~4x down.
+    it2 mb16+rs: shard the carried residual over `model` (residual_shard).
+                 Hypothesis: saved activations 88*4096*12288*2 = 8.9 GB/dev
+                 -> 0.56 GB/dev; adds per-layer all-gather of the residual
+                 (~100 MB/layer/microbatch) — net memory win, small ici cost.
+    it3 mb4+rs:  with activations 16x smaller, drop to 4 microbatches.
+                 Hypothesis: FSDP param all-gathers scale with microbatch count:
+                 ici ~4x down vs it2; activation memory x4 (still fits).
+    """
+    arch = "mistral-large-123b"
+    cfg = get_config(arch)
+    yield run_cell(arch, "train_4k", False, microbatches=16, variant="it1_mb16")
+    rs = dataclasses.replace(cfg, residual_shard=True)
+    yield run_cell(arch, "train_4k", False, microbatches=16, variant="it2_mb16_rs",
+                   cfg_override=rs)
+    yield run_cell(arch, "train_4k", False, microbatches=4, variant="it3_mb4_rs",
+                   cfg_override=rs)
+
+
+def cell_b():
+    """mamba2-2.7b / train_4k — worst roofline fraction (memory-bound SSD).
+
+    it1 mb16:     cap microbatches (same pathology as cell A at mb=32: the
+                  8-sample microbatch replicates 2x over 16 batch shards).
+    it2 +chunk64: SSD chunk 256 -> 64.  Hypothesis: intra-chunk L/M-matrix
+                  traffic ~ S*l per head (l^2 per chunk x S/l chunks); state
+                  traffic ~ (S/l)*P*N.  l* = sqrt(P*N) = sqrt(64*128) ~ 90 =>
+                  chunk 64 cuts the dominant term ~4x at ~2x state cost.
+    it3 +vpad:    pad vocab 50280 -> 50432 (divisible by 16).  Hypothesis: the
+                  odd vocab forces replicated (B,S,V) fp32 logits per device
+                  (16x the sharded size) — padding restores vocab sharding.
+    """
+    arch = "mamba2-2.7b"
+    cfg = get_config(arch)
+    yield run_cell(arch, "train_4k", False, microbatches=16, variant="it1_mb16")
+    c64 = dataclasses.replace(cfg, ssm_chunk=64)
+    yield run_cell(arch, "train_4k", False, microbatches=16, variant="it2_mb16_chunk64",
+                   cfg_override=c64)
+    vpad = dataclasses.replace(c64, vocab=50432)
+    yield run_cell(arch, "train_4k", False, microbatches=16, variant="it3_mb16_chunk64_vpad",
+                   cfg_override=vpad)
+
+
+def cell_c():
+    """zamba2-7b / long_500k — the technique-representative cell (sequence-
+    sharded KV decode; currently 22 GB/dev, does NOT fit).
+
+    it1 seqdata:  batch=1 leaves (data) idle; remap the "seq" logical axis to
+                  ("model","data") => cache seq sharded 256-ways instead of 16.
+                  Hypothesis: per-device KV 19.5 GB -> ~1.2 GB (fits), memory
+                  term ~16x down; attention psum merges now span 256 devices
+                  (latency, not bytes — stats are tiny).
+    it2 +vpad:    zamba2 vocab 32000 = 16*2000 already divides — instead probe
+                  the multi-pod mesh with the same remap incl. "pod"
+                  (seq over model+data+pod = 512 shards).
+    """
+    arch = "zamba2-7b"
+    yield run_cell(arch, "long_500k", False, variant="it1_seqdata",
+                   seq_axes=("model", "data"))
+    yield run_cell(arch, "long_500k", True, variant="it2_seqdatapod",
+                   seq_axes=("model", "data", "pod"))
+
+
+CELLS = {"cellA": cell_a, "cellB": cell_b, "cellC": cell_c}
+
+
+def main():
+    which = sys.argv[1:] or list(CELLS)
+    for name in which:
+        print(f"==== {name}: {CELLS[name].__doc__.splitlines()[0]} ====", flush=True)
+        for cell in CELLS[name]():
+            print(summarize(cell), flush=True)
+
+
+if __name__ == "__main__":
+    main()

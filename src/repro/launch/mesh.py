@@ -1,0 +1,34 @@
+"""Production mesh builders (DESIGN.md Sec. 5).
+
+`make_production_mesh` is a FUNCTION so importing this module never touches jax
+device state.  Single pod = one v5e 16x16 ICI torus (256 chips); multi-pod adds a
+leading `pod` axis over DCN (2 x 256 = 512 chips).  A `pipeline` axis name is
+reserved for larger deployments (unused at these scales — see DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model: int = 0) -> Optional[Mesh]:
+    """Best-effort mesh over whatever devices exist (smoke tests, examples).
+    Returns None when only one device is available (Sharder treats None as
+    'no constraints')."""
+    n = len(jax.devices())
+    if n == 1:
+        return None
+    m = model or (2 if n % 2 == 0 else 1)
+    return make_mesh((n // m, m), ("data", "model"))

@@ -1,0 +1,91 @@
+"""Production training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --shape train_4k \
+      --steps 100 [--reduced] [--mesh 2x4] [--microbatches 4] [--resume] \
+      [--residual-shard] [--fused-qkv] [--policy artifacts/policy.json]
+
+On this CPU container use --reduced (full configs are exercised via the dry-run).
+The mesh string "DxM" builds (data=D, model=M) over the available devices;
+"PxDxM" adds the pod axis. Without --mesh, a best-effort host mesh is used.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+
+from ..configs.base import SHAPES, get_config, list_configs, shape_applicable
+from ..core.autotune import CollectivePolicy
+from ..optim import OptConfig
+from ..runtime.train import Trainer, TrainConfig
+from .mesh import make_host_mesh, make_mesh
+
+
+def parse_mesh(spec: str):
+    dims = [int(x) for x in spec.lower().split("x")]
+    if len(dims) == 2:
+        return make_mesh(tuple(dims), ("data", "model"))
+    if len(dims) == 3:
+        return make_mesh(tuple(dims), ("pod", "data", "model"))
+    raise SystemExit(f"bad --mesh {spec!r} (want DxM or PxDxM)")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_configs())
+    ap.add_argument("--shape", default="train_4k", choices=list(SHAPES))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=50)
+    ap.add_argument("--ckpt-dir", default="artifacts/train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--residual-shard", action="store_true")
+    ap.add_argument("--fused-qkv", action="store_true")
+    ap.add_argument("--fast-norm", action="store_true")
+    ap.add_argument("--policy", default=None,
+                    help="collective policy JSON (core.autotune); informational "
+                         "for the XLA path, binding for explicit-DP runs")
+    ap.add_argument("--straggler-threshold", type=float, default=2.5)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    cfg = dataclasses.replace(cfg, residual_shard=args.residual_shard,
+                              fused_qkv=args.fused_qkv and not cfg.qkv_bias,
+                              fast_norm=args.fast_norm)
+    shape = SHAPES[args.shape]
+    if args.reduced:
+        shape = shape.reduced()
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        raise SystemExit(why)
+    if shape.kind != "train":
+        raise SystemExit(f"--shape {args.shape} is a {shape.kind} shape; use launch.serve")
+
+    mesh = parse_mesh(args.mesh) if args.mesh else make_host_mesh()
+    if args.policy:
+        CollectivePolicy.load(args.policy)  # validated; runtime reads it on demand
+
+    trainer = Trainer(
+        cfg, shape,
+        OptConfig(peak_lr=args.lr, warmup_steps=args.warmup, decay_steps=args.steps),
+        TrainConfig(steps=args.steps, microbatches=args.microbatches,
+                    ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir,
+                    log_every=10, straggler_threshold=args.straggler_threshold),
+        mesh=mesh,
+    )
+    result = trainer.run(resume=args.resume)
+    losses = [m["loss"] for m in result["metrics"]]
+    if losses:
+        print(f"done: step {result['final_step']}, loss {losses[0]:.4f} -> "
+              f"{losses[-1]:.4f}, stragglers {result['straggler_events']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,2 @@
+from .model import Model, build_model
+from .sharding import Sharder, tree_shardings, tree_shardings_shaped

@@ -1,0 +1,162 @@
+"""Zamba2-style hybrid: Mamba2 backbone + ONE shared transformer block applied
+every `attn_every` SSM layers (weights shared across applications; the block input
+is concat([x, x_embed]) projected 2D->D, following the Zamba design).
+
+Layout: G = n_layers // attn_every groups of [attn_every mamba layers + shared
+block], plus R = n_layers - G*attn_every trailing mamba layers (81 = 13*6 + 3 for
+zamba2-7b).  The shared block's KV cache is (G, B, S, K, hd) — sequence-sharded
+for long-context decode (the paper-aligned path; DESIGN.md Sec. 5).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import apply_rope, attention, decode_attention, mlp, rms_norm
+from .mamba2 import mamba_block, ssm_param_defs
+from .sharding import Sharder
+
+
+def hybrid_param_defs(cfg: ModelConfig) -> Dict:
+    D, F, V = cfg.d_model, cfg.d_ff, cfg.vocab
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = cfg.n_layers // cfg.attn_every
+    R = cfg.n_layers - G * cfg.attn_every
+    defs = {
+        "emb": ((V, D), ("vocab", None)),
+        "mamba": ssm_param_defs(cfg, n_layers=G * cfg.attn_every),
+        "shared": {
+            "in_proj": ((2 * D, D), ("fsdp", None)),
+            "ln_in": ((2 * D,), (None,)),
+            "ln1": ((D,), (None,)),
+            "wq": ((D, H * hd), ("fsdp", "tp")),
+            "wk": ((D, K * hd), ("fsdp", "tp")),
+            "wv": ((D, K * hd), ("fsdp", "tp")),
+            "wo": ((H * hd, D), ("tp", "fsdp")),
+            "ln2": ((D,), (None,)),
+            "mlp": {"w1": ((D, F), ("fsdp", "tp")), "w2": ((F, D), ("tp", "fsdp"))},
+            "out_proj": ((D, D), ("fsdp", None)),
+        },
+        "ln_f": ((D,), (None,)),
+        "head": ((V, D), ("vocab", None)),
+    }
+    if R:
+        defs["extra"] = ssm_param_defs(cfg, n_layers=R)
+    return defs
+
+
+def shared_block(x, x0, sp, cfg: ModelConfig, shd: Optional[Sharder], positions,
+                 kv: Optional[Tuple] = None, pos=None):
+    """The shared attention+MLP block.  x0: token embeddings (Zamba concat trick)."""
+    B, S, D = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    h = rms_norm(jnp.concatenate([x, x0], axis=-1), sp["ln_in"])
+    h = jnp.einsum("bse,ed->bsd", h, sp["in_proj"])
+    a_in = rms_norm(h, sp["ln1"])
+    q = jnp.einsum("bsd,de->bse", a_in, sp["wq"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,de->bse", a_in, sp["wk"]).reshape(B, S, K, hd)
+    v = jnp.einsum("bsd,de->bse", a_in, sp["wv"]).reshape(B, S, K, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    new_kv = None
+    if kv is not None:
+        kc, vc = kv
+        if pos is None:
+            kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, 0, 0, 0))
+            vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, 0, 0, 0))
+            o = attention(q, k, v, impl=cfg.attn_impl, q_block=cfg.q_block, shd=shd)
+        else:
+            kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, pos, 0, 0))
+            vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, pos, 0, 0))
+            if shd is not None:
+                kc = shd.constrain(kc, "batch", "seq", None, None)
+                vc = shd.constrain(vc, "batch", "seq", None, None)
+            o = decode_attention(q, kc, vc, pos, shd=shd)
+        new_kv = (kc, vc)
+    else:
+        o = attention(q, k, v, impl=cfg.attn_impl, q_block=cfg.q_block, shd=shd)
+    h = h + jnp.einsum("bse,ed->bsd", o.reshape(B, S, H * hd), sp["wo"])
+    h = h + mlp(rms_norm(h, sp["ln2"]), sp["mlp"], cfg.mlp, shd)
+    return x + jnp.einsum("bsd,de->bse", h, sp["out_proj"]), new_kv
+
+
+def _group_tree(tree, G: int, M: int):
+    return jax.tree.map(lambda a: a.reshape(G, M, *a.shape[1:]), tree)
+
+
+def hybrid_forward(params, x0, cfg: ModelConfig, shd: Optional[Sharder], positions):
+    """Training/scoring trunk.  x0: (B, S, D) embeddings."""
+    G, M = cfg.n_layers // cfg.attn_every, cfg.attn_every
+    grouped = _group_tree(params["mamba"], G, M)
+    sp = params["shared"]
+
+    def inner(c, lp):
+        out, _ = mamba_block(c, lp, cfg, shd)
+        return c + out, None
+
+    def group_body(c, gp):
+        h, _ = jax.lax.scan(inner, c, gp)
+        h, _ = shared_block(h, x0, sp, cfg, shd, positions)
+        if shd is not None:
+            h = shd.constrain(h, "batch", None, None)
+        return h, None
+
+    if cfg.remat == "block":
+        group_body = jax.checkpoint(group_body)
+    x, _ = jax.lax.scan(group_body, x0, grouped)
+    if "extra" in params:
+        body = jax.checkpoint(inner) if cfg.remat == "block" else inner
+        x, _ = jax.lax.scan(body, x, params["extra"])
+    return rms_norm(x, params["ln_f"])
+
+
+def hybrid_forward_cached(params, x0, cfg: ModelConfig, shd, positions, cache, pos=None):
+    """Prefill (pos None) / decode (pos scalar) with states.
+
+    cache = {"mamba": {"conv","ssm"} leading dim G*M, "extra": same (R),
+             "k","v": (G, B, S, K, hd)}  (mamba states present only in decode).
+    """
+    G, M = cfg.n_layers // cfg.attn_every, cfg.attn_every
+    grouped = _group_tree(params["mamba"], G, M)
+    sp = params["shared"]
+    decode = pos is not None
+
+    def inner(c, xs):
+        lp, st = xs
+        out, new_st = mamba_block(c, lp, cfg, shd, st)
+        return c + out, new_st
+
+    def inner_prefill(c, lp):
+        out, st = mamba_block(c, lp, cfg, shd)
+        return c + out, st
+
+    def group_body(c, xs):
+        if decode:
+            gp, gst, kc, vc = xs
+            h, new_st = jax.lax.scan(inner, c, (gp, gst))
+        else:
+            gp, kc, vc = xs
+            h, new_st = jax.lax.scan(inner_prefill, c, gp)
+        h, (kc, vc) = shared_block(h, x0, sp, cfg, shd, positions, (kc, vc), pos)
+        return h, (new_st, kc, vc)
+
+    if decode:
+        gstates = _group_tree(cache["mamba"], G, M)
+        x, (new_states, kcs, vcs) = jax.lax.scan(
+            group_body, x0, (grouped, gstates, cache["k"], cache["v"]))
+    else:
+        x, (new_states, kcs, vcs) = jax.lax.scan(
+            group_body, x0, (grouped, cache["k"], cache["v"]))
+    new_cache = {"mamba": jax.tree.map(lambda a: a.reshape(G * M, *a.shape[2:]), new_states),
+                 "k": kcs, "v": vcs}
+
+    if "extra" in params:
+        if decode:
+            x, new_extra = jax.lax.scan(inner, x, (params["extra"], cache["extra"]))
+        else:
+            x, new_extra = jax.lax.scan(inner_prefill, x, params["extra"])
+        new_cache["extra"] = new_extra
+    return rms_norm(x, params["ln_f"]), new_cache

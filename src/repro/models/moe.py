@@ -1,0 +1,102 @@
+"""Mixture-of-Experts FFN: top-k routing with per-row capacity (token dropping).
+
+Formulation chosen for TPU/SPMD friendliness (DESIGN.md Sec. 5):
+  * routing + dispatch indices are computed *per batch row* (vmap over B), so they
+    never cross the data-parallel sharding;
+  * dispatch is a pure gather into an (E, C, D) buffer — the expert dim carries the
+    "expert" logical axis (the `model` mesh axis), so the gather materializes the
+    all-to-all token exchange under XLA SPMD;
+  * expert compute is one batched matmul (E, C, D) x (E, D, F);
+  * combine is a gather back in token space + weighted sum over the k slots; the
+    sum over experts crosses the `expert` sharding, so XLA emits the combine
+    collective (the MoE all-to-all/all-reduce of the paper's alltoall study).
+
+Capacity C = ceil(S * top_k / E * capacity_factor); overflow tokens are dropped
+(standard Switch semantics).  The aux output is the load-balancing loss.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .sharding import Sharder
+
+
+def _capacity(seq: int, cfg: ModelConfig) -> int:
+    c = int(seq * cfg.top_k / cfg.n_experts * cfg.capacity_factor) + 1
+    return min(max(c, cfg.top_k), seq * cfg.top_k)
+
+
+def route_row(xrow: jnp.ndarray, router: jnp.ndarray, cfg: ModelConfig, capacity: int):
+    """xrow: (S, D); router: (D, E).  Returns dispatch/combine indices."""
+    S = xrow.shape[0]
+    E, k = cfg.n_experts, cfg.top_k
+    logits = jnp.einsum("sd,de->se", xrow.astype(jnp.float32), router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, k)                     # (S, k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)  # renormalize over top-k
+    e_flat = idx.reshape(-1)                             # (S*k,)
+    w_flat = w.reshape(-1)
+    order = jnp.argsort(e_flat)                          # stable
+    sorted_e = e_flat[order]
+    counts = jnp.bincount(e_flat, length=E)              # (E,)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(S * k) - starts[sorted_e]      # rank within expert
+    # dispatch gather indices: buffer slot (e, c) <- sorted position starts[e]+c
+    src = jnp.clip(starts[:, None] + jnp.arange(capacity)[None, :], 0, S * k - 1)  # (E, C)
+    tok_slot = order[src]                                # (E, C) token-slot ids
+    valid = jnp.arange(capacity)[None, :] < jnp.minimum(counts[:, None], capacity)
+    # combine gather indices: token-slot t -> (expert, position) with drop mask
+    inv_order = jnp.argsort(order)
+    c_of_slot = pos_in_e[inv_order]                      # (S*k,)
+    keep = c_of_slot < capacity
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    f = counts.astype(jnp.float32) / (S * k)
+    p = probs.mean(axis=0)
+    aux = E * jnp.sum(f * p)
+    return dict(tok=tok_slot // cfg.top_k, valid=valid, e_of_slot=e_flat,
+                c_of_slot=c_of_slot, keep=keep, w=w_flat, aux=aux)
+
+
+def moe_ffn(x: jnp.ndarray, lp: dict, cfg: ModelConfig, shd: Sharder) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) normalized hidden states; lp: layer params (router/experts[/shared])."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = _capacity(S, cfg)
+    r = jax.vmap(lambda xr: route_row(xr, lp["router"], cfg, C))(x)
+
+    # ---- dispatch (pure gather; buffer sharded over the expert axis) ----
+    xb = jax.vmap(lambda xr, tok: xr[tok])(x, r["tok"])   # (B, E, C, D)
+    xb = xb * r["valid"][..., None].astype(x.dtype)
+    if shd is not None:
+        xb = shd.constrain(xb, "batch", "expert", None, None)
+
+    # ---- expert compute: batched swiglu ----
+    h = jnp.einsum("becd,edf->becf", xb, lp["experts"]["w1"])
+    g = jnp.einsum("becd,edf->becf", xb, lp["experts"]["w3"])
+    h = jax.nn.silu(h) * g
+    y = jnp.einsum("becf,efd->becd", h, lp["experts"]["w2"])  # (B, E, C, D)
+    if shd is not None:
+        y = shd.constrain(y, "batch", "expert", None, None)
+
+    # ---- combine: gather back per token-slot, weighted sum over k ----
+    def combine_row(yr, e_of, c_of, keep, w):
+        vals = yr[e_of, jnp.clip(c_of, 0, C - 1)]          # (S*k, D)
+        vals = vals * (keep & True)[:, None] * w[:, None]
+        return vals.reshape(S, k, -1).sum(axis=1)
+
+    out = jax.vmap(combine_row)(y.astype(jnp.float32), r["e_of_slot"], r["c_of_slot"],
+                                r["keep"], r["w"])
+    if shd is not None:
+        out = shd.constrain(out, "batch", None, None)
+
+    if cfg.n_shared_experts:
+        sh = lp["shared"]
+        hs = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, sh["w1"])) * \
+            jnp.einsum("bsd,df->bsf", x, sh["w3"])
+        out = out + jnp.einsum("bsf,fd->bsd", hs, sh["w2"]).astype(jnp.float32)
+
+    return out.astype(x.dtype), jnp.mean(r["aux"])

@@ -1,0 +1,1 @@
+from .adamw import OptConfig, init_opt_state, abstract_opt_state, opt_state_logical, apply_updates, schedule

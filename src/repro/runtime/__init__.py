@@ -1,0 +1,3 @@
+from . import steps
+from .train import Trainer, TrainConfig
+from .serve import BatchedServer, ServeConfig

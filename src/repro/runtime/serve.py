@@ -1,0 +1,87 @@
+"""Batched serving: prefill + decode loop with greedy/temperature sampling.
+
+The decode step attends over the sequence-sharded KV cache (DESIGN.md Sec. 5);
+requests are served in fixed-size batches with left-padded prompts (continuous
+batching reduces to swapping retired rows — `generate` retires rows on EOS by
+masking).  The collective policy applies through the model's sharding
+constraints; this loop adds the serving-level bookkeeping.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models.model import build_model
+from . import steps as rsteps
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0     # 0 => greedy
+    eos_id: int = -1             # -1 => never stop early
+    seed: int = 0
+
+
+class BatchedServer:
+    def __init__(self, model_cfg: ModelConfig, max_seq: int, batch_size: int,
+                 mesh=None, params=None):
+        self.cfg = model_cfg
+        self.shape = ShapeConfig("serve", max_seq, batch_size, "decode")
+        self.model = build_model(model_cfg, mesh)
+        self.params = params if params is not None else \
+            self.model.init(jax.random.PRNGKey(0))
+        self._prefill = jax.jit(self.model.prefill)
+        self._decode = jax.jit(self.model.decode)
+
+    def generate(self, prompts: np.ndarray, serve: Optional[ServeConfig] = None) -> np.ndarray:
+        """prompts: (B, P) int32 (audio: (B, P, nq)).  Returns generated ids
+        (B, max_new) (audio: (B, max_new, nq))."""
+        serve = serve or ServeConfig()
+        B = prompts.shape[0]
+        P = prompts.shape[1]
+        cache = self.model.init_cache(self.shape, batch_size=B)
+        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(prompts)}, cache)
+        key = jax.random.PRNGKey(serve.seed)
+        outs = []
+        done = np.zeros((B,), bool)
+        tok = self._sample(logits, serve, key)
+        for t in range(serve.max_new_tokens):
+            outs.append(np.asarray(tok))
+            if serve.eos_id >= 0:
+                done |= (np.asarray(tok).reshape(B, -1)[:, 0] == serve.eos_id)
+                if done.all():
+                    break
+            logits, cache = self._decode(self.params, cache, tok,
+                                         jnp.array(P + t, jnp.int32))
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits, serve, sub)
+        return np.stack(outs, axis=1)
+
+    def _sample(self, logits, serve: ServeConfig, key):
+        lg = logits[:, -1] if logits.ndim == 3 else logits[:, -1, :, :]
+        if serve.temperature <= 0.0:
+            return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, lg / serve.temperature, axis=-1).astype(jnp.int32)
+
+
+def throughput_report(server: BatchedServer, prompt_len: int = 32,
+                      new_tokens: int = 16) -> dict:
+    """Tokens/s for one batch (benchmark harness hook)."""
+    import time
+    B = server.shape.global_batch
+    rng = np.random.RandomState(0)
+    if server.cfg.n_codebooks:
+        prompts = rng.randint(0, server.cfg.vocab, (B, prompt_len, server.cfg.n_codebooks)).astype(np.int32)
+    else:
+        prompts = rng.randint(0, server.cfg.vocab, (B, prompt_len)).astype(np.int32)
+    t0 = time.perf_counter()
+    out = server.generate(prompts, ServeConfig(max_new_tokens=new_tokens))
+    dt = time.perf_counter() - t0
+    return {"batch": B, "new_tokens": int(out.shape[1]),
+            "tokens_per_s": B * out.shape[1] / dt, "wall_s": dt}

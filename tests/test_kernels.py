@@ -1,0 +1,140 @@
+"""Per-kernel allclose vs ref.py oracles: shape/dtype sweeps + hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+RNG = np.random.RandomState(0)
+
+
+def _attn_ref_4d(q, k, v, causal=True):
+    b, s, h, hd = q.shape
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    out = ref.attention_ref(fold(q), fold(k), fold(v), causal=causal)
+    return out.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+
+
+@pytest.mark.parametrize("b,s,h,hd", [(2, 256, 4, 64), (1, 128, 2, 128),
+                                      (2, 512, 3, 64), (1, 64, 1, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, s, h, hd, dtype):
+    q = jnp.array(RNG.randn(b, s, h, hd), dtype)
+    k = jnp.array(RNG.randn(b, s, h, hd), dtype)
+    v = jnp.array(RNG.randn(b, s, h, hd), dtype)
+    out = ops.flash_attention(q, k, v, q_block=min(128, s), kv_block=min(128, s))
+    want = _attn_ref_4d(q, k, v)
+    tol = 5e-6 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("qb,kb", [(64, 32), (128, 256), (32, 32)])
+def test_flash_attention_block_shapes(qb, kb):
+    b, s, h, hd = 1, 256, 2, 64
+    q = jnp.array(RNG.randn(b, s, h, hd), jnp.float32)
+    k = jnp.array(RNG.randn(b, s, h, hd), jnp.float32)
+    v = jnp.array(RNG.randn(b, s, h, hd), jnp.float32)
+    out = ops.flash_attention(q, k, v, q_block=qb, kv_block=kb)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(_attn_ref_4d(q, k, v)),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_flash_attention_non_causal():
+    b, s, h, hd = 1, 128, 2, 64
+    q = jnp.array(RNG.randn(b, s, h, hd), jnp.float32)
+    k = jnp.array(RNG.randn(b, s, h, hd), jnp.float32)
+    v = jnp.array(RNG.randn(b, s, h, hd), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=False)
+    want = _attn_ref_4d(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5, rtol=1e-5)
+
+
+@given(st.integers(1, 3), st.sampled_from([64, 128]), st.sampled_from([1, 2]),
+       st.sampled_from([32, 64]))
+@settings(max_examples=8, deadline=None)
+def test_flash_attention_property(b, s, h, hd):
+    rng = np.random.RandomState(b * 1000 + s + h + hd)
+    q = jnp.array(rng.randn(b, s, h, hd), jnp.float32)
+    k = jnp.array(rng.randn(b, s, h, hd), jnp.float32)
+    v = jnp.array(rng.randn(b, s, h, hd), jnp.float32)
+    out = ops.flash_attention(q, k, v, q_block=32, kv_block=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(_attn_ref_4d(q, k, v)),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_softmax_invariance():
+    """Property: shifting all logits by a constant (scaling q) changes nothing
+    about the *uniform-value* case; softmax rows sum to one => output within the
+    convex hull of v rows."""
+    b, s, h, hd = 1, 128, 1, 64
+    q = jnp.array(RNG.randn(b, s, h, hd), jnp.float32)
+    k = jnp.array(RNG.randn(b, s, h, hd), jnp.float32)
+    v = jnp.ones((b, s, h, hd), jnp.float32) * 3.5
+    out = ops.flash_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), 3.5, atol=1e-5)
+
+
+@pytest.mark.parametrize("r,d", [(8, 128), (64, 576), (128, 2048), (5, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(r, d, dtype):
+    x = jnp.array(RNG.randn(r, d), dtype)
+    sc = jnp.array(RNG.randn(d), dtype)
+    out = ops.rmsnorm(x, sc)
+    want = ref.rmsnorm_ref(x, sc)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(want, np.float32),
+                               atol=1e-5 if dtype == jnp.float32 else 2e-2)
+
+
+def test_rmsnorm_3d():
+    x = jnp.array(RNG.randn(2, 7, 96), jnp.float32)
+    sc = jnp.array(RNG.randn(96), jnp.float32)
+    np.testing.assert_allclose(np.asarray(ops.rmsnorm(x, sc)),
+                               np.asarray(ref.rmsnorm_ref(x, sc)), atol=1e-5)
+
+
+def _ssd_oracle(x, dt, A, B, C, chunk):
+    b, s = x.shape[0], x.shape[1]
+    ys = []
+    for bi in range(b):
+        h0 = jnp.zeros((x.shape[2], x.shape[3], B.shape[-1]), jnp.float32)
+        outs = []
+        for c in range(s // chunk):
+            sl = slice(c * chunk, (c + 1) * chunk)
+            yc, h0 = ref.ssd_chunk_ref(x[bi, sl], dt[bi, sl], A, B[bi, sl], C[bi, sl], h0)
+            outs.append(yc)
+        ys.append(jnp.concatenate(outs, 0))
+    return jnp.stack(ys)
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (2, 64, 4, 8, 16, 16), (1, 128, 2, 16, 8, 32), (1, 32, 8, 4, 4, 8),
+])
+def test_ssd_scan_sweep(b, s, h, p, n, chunk):
+    rng = np.random.RandomState(7)
+    x = jnp.array(rng.randn(b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jnp.array(rng.randn(b, s, h), jnp.float32))
+    A = -jnp.exp(jnp.array(rng.randn(h), jnp.float32))
+    B = jnp.array(rng.randn(b, s, n), jnp.float32)
+    C = jnp.array(rng.randn(b, s, n), jnp.float32)
+    out = ops.ssd_scan(x, dt, A, B, C, chunk=chunk)
+    want = _ssd_oracle(x, dt, A, B, C, chunk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-4, rtol=2e-3)
+
+
+def test_ssd_kernel_matches_model_chunked():
+    """Kernel vs models/mamba2.ssd_chunked (two independent implementations)."""
+    from repro.models.mamba2 import ssd_chunked
+    rng = np.random.RandomState(3)
+    b, s, h, p, n, chunk = 2, 64, 4, 8, 16, 16
+    x = jnp.array(rng.randn(b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jnp.array(rng.randn(b, s, h), jnp.float32))
+    A = -jnp.exp(jnp.array(rng.randn(h), jnp.float32))
+    B = jnp.array(rng.randn(b, s, 1, n), jnp.float32)
+    C = jnp.array(rng.randn(b, s, 1, n), jnp.float32)
+    out_kernel = ops.ssd_scan(x, dt, A, B, C, chunk=chunk)
+    out_model, _ = ssd_chunked(x, dt, A, B, C, chunk)
+    np.testing.assert_allclose(np.asarray(out_kernel), np.asarray(out_model),
+                               atol=2e-4, rtol=2e-3)

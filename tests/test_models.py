@@ -1,0 +1,175 @@
+"""Architecture smoke tests (all 10, reduced configs) + semantic equivalences."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config, list_configs
+from repro.configs.base import ShapeConfig, shape_applicable
+from repro.models import build_model
+from repro.models import transformer as T
+
+ALL_ARCHS = list_configs()
+TRAIN_SHAPE = ShapeConfig("t", 64, 4, "train")
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_arch_smoke_train_step(arch):
+    """Reduced config: one forward/loss on CPU — shapes + no NaNs."""
+    cfg = get_config(arch).reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = m.make_batch(TRAIN_SHAPE)
+    loss = jax.jit(m.loss)(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch} loss not finite"
+    assert 1.0 < float(loss) < 20.0  # ~ln(vocab) at init
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_arch_smoke_decode_step(arch):
+    cfg = get_config(arch).reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    dshape = ShapeConfig("d", 32, 2, "decode")
+    cache = m.init_cache(dshape, batch_size=2)
+    tok = m.make_batch(dshape)["tokens"][:2]
+    logits, cache2 = jax.jit(m.decode)(params, cache, tok, jnp.array(3))
+    assert logits.shape[0] == 2 and logits.shape[-1] == cfg.vocab
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "qwen1.5-4b", "musicgen-medium",
+                                  "mamba2-2.7b", "zamba2-7b"])
+def test_decode_matches_forward(arch):
+    """prefill + incremental decode == full forward (the caching invariant)."""
+    cfg = dataclasses.replace(get_config(arch).reduced(), remat="none")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    S, P0 = 16, 8
+    batch = m.make_batch(ShapeConfig("t", S, 2, "train"))
+    x, positions = m._embed(params, batch)
+    if cfg.family == "ssm":
+        xh = m._ssm_forward(params, x)
+    elif cfg.family == "hybrid":
+        from repro.models import hybrid as H
+        xh = H.hybrid_forward(params, x, cfg, m.shd, positions)
+    else:
+        xh, _ = T.forward(params, x, cfg, m.shd, positions)
+    full = np.asarray(T.unembed(params, xh, cfg, m.shd).astype(jnp.float32))
+
+    cache = m.init_cache(ShapeConfig("d", S, 2, "decode"), batch_size=2)
+    toks = batch["tokens"]
+    lg, cache = jax.jit(m.prefill)(params, {"tokens": toks[:, :P0]}, cache)
+    errs = [np.abs(np.asarray(lg.astype(jnp.float32))[:, 0] - full[:, P0 - 1]).max()]
+    dec = jax.jit(m.decode)
+    for p in range(P0, S - 1):
+        tok = toks[:, p] if toks.ndim == 2 else toks[:, p, :]
+        lg, cache = dec(params, cache, tok, jnp.array(p, jnp.int32))
+        errs.append(np.abs(np.asarray(lg.astype(jnp.float32))[:, 0] - full[:, p]).max())
+    tol = 1e-4 if cfg.family in ("dense", "audio") else 0.08  # bf16 recurrences
+    assert max(errs) < tol, f"{arch}: {max(errs)}"
+
+
+def test_moe_decode_matches_forward_without_drops():
+    cfg = dataclasses.replace(get_config("deepseek-moe-16b").reduced(),
+                              remat="none", capacity_factor=16.0)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    S = 16
+    batch = m.make_batch(ShapeConfig("t", S, 2, "train"))
+    x, positions = m._embed(params, batch)
+    xh, _ = T.forward(params, x, cfg, m.shd, positions)
+    full = np.asarray(T.unembed(params, xh, cfg, m.shd).astype(jnp.float32))
+    cache = m.init_cache(ShapeConfig("d", S, 2, "decode"), batch_size=2)
+    lg, cache = jax.jit(m.prefill)(params, {"tokens": batch["tokens"][:, :8]}, cache)
+    err = np.abs(np.asarray(lg.astype(jnp.float32))[:, 0] - full[:, 7]).max()
+    assert err < 1e-4
+
+
+def test_moe_capacity_drops_tokens():
+    """Low capacity must change outputs (drops) but keep them finite."""
+    base = get_config("deepseek-moe-16b").reduced()
+    m_lo = build_model(dataclasses.replace(base, capacity_factor=0.5, remat="none"))
+    m_hi = build_model(dataclasses.replace(base, capacity_factor=16.0, remat="none"))
+    params = m_lo.init(jax.random.PRNGKey(0))
+    batch = m_lo.make_batch(TRAIN_SHAPE)
+    lo = jax.jit(m_lo.loss)(params, batch)
+    hi = jax.jit(m_hi.loss)(params, batch)
+    assert bool(jnp.isfinite(lo)) and bool(jnp.isfinite(hi))
+    assert abs(float(lo) - float(hi)) > 1e-6
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_param_count_analytic_matches_tree(arch):
+    """cfg.param_count() (used for MODEL_FLOPS) vs the actual parameter tree."""
+    cfg = get_config(arch)
+    m = build_model(cfg)
+    tree = m.abstract_params()
+    actual = sum(np.prod(l.shape) for l in jax.tree.leaves(tree))
+    expected = cfg.param_count()
+    assert abs(actual - expected) / expected < 0.05, (actual, expected)
+
+
+def test_vlm_loss_ignores_image_positions():
+    cfg = get_config("internvl2-26b").reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    b = m.make_batch(TRAIN_SHAPE)
+    l1 = jax.jit(m.loss)(params, b)
+    assert bool(jnp.isfinite(l1))
+
+
+def test_long_500k_applicability():
+    """The documented skip matrix: ssm/hybrid run long_500k, full-attention don't."""
+    long = SHAPES["long_500k"]
+    runnable = {a for a in ALL_ARCHS if shape_applicable(get_config(a), long)[0]}
+    assert runnable == {"mamba2-2.7b", "zamba2-7b"}
+
+
+def test_ssd_chunked_matches_reference():
+    from repro.models.mamba2 import ssd_chunked, ssd_reference
+    rng = np.random.RandomState(0)
+    b, s, h, p, g, n = 2, 32, 4, 8, 1, 16
+    x = jnp.array(rng.randn(b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jnp.array(rng.randn(b, s, h), jnp.float32))
+    A = -jnp.exp(jnp.array(rng.randn(h), jnp.float32))
+    B = jnp.array(rng.randn(b, s, g, n), jnp.float32)
+    C = jnp.array(rng.randn(b, s, g, n), jnp.float32)
+    y_ref, f_ref = ssd_reference(x, dt, A, B, C)
+    for chunk in (8, 16, 32):
+        y, f = ssd_chunked(x, dt, A, B, C, chunk)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(f), np.asarray(f_ref), atol=1e-4)
+
+
+def test_blockwise_equals_naive_attention():
+    from repro.models.layers import blockwise_attention, naive_attention
+    rng = np.random.RandomState(0)
+    q = jnp.array(rng.randn(2, 128, 4, 32), jnp.float32)
+    k = jnp.array(rng.randn(2, 128, 4, 32), jnp.float32)
+    v = jnp.array(rng.randn(2, 128, 4, 32), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(blockwise_attention(q, k, v, q_block=32)),
+        np.asarray(naive_attention(q, k, v)), atol=1e-5, rtol=1e-5)
+
+
+def test_gqa_repeat_semantics():
+    """GQA with K=H must equal MHA; K<H groups share kv."""
+    from repro.models.layers import attention
+    rng = np.random.RandomState(0)
+    q = jnp.array(rng.randn(1, 32, 4, 16), jnp.float32)
+    k4 = jnp.array(rng.randn(1, 32, 4, 16), jnp.float32)
+    v4 = jnp.array(rng.randn(1, 32, 4, 16), jnp.float32)
+    out = attention(q, k4, v4, impl="naive")
+    # grouped: take 2 kv heads, repeat manually
+    k2, v2 = k4[:, :, :2], v4[:, :, :2]
+    out_g = attention(q, k2, v2, impl="naive")
+    manual_k = jnp.repeat(k2, 2, axis=2)
+    manual_v = jnp.repeat(v2, 2, axis=2)
+    out_m = attention(q, manual_k, manual_v, impl="naive")
+    np.testing.assert_allclose(np.asarray(out_g), np.asarray(out_m), atol=1e-6)
+    assert not np.allclose(np.asarray(out_g), np.asarray(out))

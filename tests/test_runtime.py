@@ -1,0 +1,167 @@
+"""Runtime: optimizer math, train loop, checkpoint/restart, data, compression."""
+import dataclasses
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.data import SyntheticLM, DataConfig, PrefetchIterator
+from repro.optim import adamw
+from repro.runtime.train import Trainer, TrainConfig
+from repro.runtime.serve import BatchedServer, ServeConfig
+
+SHAPE = ShapeConfig("t", 64, 4, "train")
+
+
+def test_adamw_single_step_math():
+    """One AdamW step vs hand-computed reference."""
+    cfg = adamw.OptConfig(peak_lr=0.1, min_lr=0.1, warmup_steps=0, decay_steps=1,
+                          b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.0,
+                          clip_norm=1e9)
+    p = {"w": jnp.array([1.0, 2.0], jnp.float32)}
+    g = {"w": jnp.array([0.5, -0.5], jnp.float32)}
+    st = adamw.init_opt_state(p)
+    new_p, new_st, _ = adamw.apply_updates(p, g, st, cfg)
+    m = 0.1 * np.array([0.5, -0.5])
+    v = 0.01 * np.array([0.25, 0.25])
+    mhat = m / (1 - 0.9)
+    vhat = v / (1 - 0.99)
+    want = np.array([1.0, 2.0]) - 0.1 * mhat / (np.sqrt(vhat) + 1e-8)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), want, rtol=1e-5)
+    assert int(new_st["step"]) == 1
+
+
+def test_grad_clip_scales_update():
+    cfg = adamw.OptConfig(clip_norm=0.1, warmup_steps=0, weight_decay=0.0)
+    p = {"w": jnp.ones((4,), jnp.float32)}
+    g = {"w": jnp.full((4,), 100.0, jnp.float32)}
+    st = adamw.init_opt_state(p)
+    _, _, metrics = adamw.apply_updates(p, g, st, cfg)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0, rel=1e-3)
+
+
+def test_schedule_warmup_and_decay():
+    cfg = adamw.OptConfig(peak_lr=1.0, min_lr=0.1, warmup_steps=10, decay_steps=100)
+    assert float(adamw.schedule(jnp.array(5), cfg)) == pytest.approx(0.5)
+    assert float(adamw.schedule(jnp.array(10), cfg)) == pytest.approx(1.0)
+    assert float(adamw.schedule(jnp.array(100), cfg)) == pytest.approx(0.1)
+
+
+def test_loss_decreases_on_tiny_model(tmp_path):
+    cfg = get_config("smollm-135m").reduced()
+    # overfit one repeated batch => loss must fall
+    class OneBatch(SyntheticLM):
+        def batch_at(self, step):
+            return super().batch_at(0)
+    tr = Trainer(cfg, SHAPE, adamw.OptConfig(peak_lr=3e-3, warmup_steps=2, decay_steps=50),
+                 TrainConfig(steps=12, ckpt_every=0, ckpt_dir=str(tmp_path), log_every=100),
+                 data=OneBatch(cfg, SHAPE))
+    res = tr.run()
+    losses = [m["loss"] for m in res["metrics"]]
+    assert losses[-1] < losses[0] - 0.2
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"a": jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.float32)}}
+    cm.save(10, tree, extra={"step": 10})
+    got, extra = cm.restore(tree)
+    assert extra["step"] == 10
+    np.testing.assert_array_equal(np.asarray(got["a"], np.float32),
+                                  np.asarray(tree["a"], np.float32))
+    assert got["a"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"a": jnp.zeros((2,))}
+    for s in (1, 2, 3, 4):
+        cm.save(s, tree)
+    assert cm.latest_step() == 4
+    steps = sorted(int(p.name.split("_")[1]) for p in tmp_path.glob("step_*"))
+    assert steps == [3, 4]
+
+
+def test_checkpoint_async_and_atomicity(tmp_path):
+    cm = CheckpointManager(str(tmp_path))
+    tree = {"a": jnp.ones((64, 64))}
+    cm.save(1, tree, blocking=False)
+    cm.wait()
+    assert cm.latest_step() == 1
+    # a stale tmp dir must be ignored
+    (tmp_path / "step_9.tmp").mkdir()
+    assert cm.latest_step() == 1
+
+
+def test_train_restart_replays_determinism(tmp_path):
+    """Fault tolerance: run 8 steps straight vs 4 + crash + resume: same loss."""
+    cfg = get_config("smollm-135m").reduced()
+    opt = adamw.OptConfig(peak_lr=1e-3, warmup_steps=2, decay_steps=50)
+    t1 = Trainer(cfg, SHAPE, opt, TrainConfig(steps=8, ckpt_every=100,
+                 ckpt_dir=str(tmp_path / "a"), log_every=100, ckpt_async=False))
+    r1 = t1.run()
+    t2 = Trainer(cfg, SHAPE, opt, TrainConfig(steps=8, ckpt_every=4,
+                 ckpt_dir=str(tmp_path / "b"), log_every=100, ckpt_async=False))
+    r2 = t2.run(inject_failure_at=6)   # crash at 6 -> restore from 4 -> replay
+    l1 = {m["step"]: m["loss"] for m in r1["metrics"]}
+    l2 = {m["step"]: m["loss"] for m in r2["metrics"]}
+    for s in (6, 7):
+        assert l2[s] == pytest.approx(l1[s], rel=1e-5), f"step {s} diverged after restart"
+
+
+def test_data_determinism_and_host_slicing():
+    cfg = get_config("smollm-135m").reduced()
+    d1 = SyntheticLM(cfg, SHAPE, DataConfig(seed=7))
+    d2 = SyntheticLM(cfg, SHAPE, DataConfig(seed=7))
+    np.testing.assert_array_equal(d1.batch_at(5)["tokens"], d2.batch_at(5)["tokens"])
+    assert not np.array_equal(d1.batch_at(5)["tokens"], d1.batch_at(6)["tokens"])
+    h0 = SyntheticLM(cfg, SHAPE, DataConfig(seed=7, host_index=0, host_count=2))
+    h1 = SyntheticLM(cfg, SHAPE, DataConfig(seed=7, host_index=1, host_count=2))
+    full = d1.batch_at(3)["tokens"]
+    np.testing.assert_array_equal(np.concatenate([h0.batch_at(3)["tokens"],
+                                                  h1.batch_at(3)["tokens"]]), full)
+
+
+def test_prefetch_iterator():
+    cfg = get_config("smollm-135m").reduced()
+    src = SyntheticLM(cfg, SHAPE)
+    it = PrefetchIterator(src, start_step=2)
+    s, b = next(it)
+    assert s == 2
+    np.testing.assert_array_equal(b["tokens"], src.batch_at(2)["tokens"])
+    it.close()
+
+
+def test_serve_greedy_deterministic():
+    cfg = get_config("smollm-135m").reduced()
+    srv = BatchedServer(cfg, max_seq=48, batch_size=2)
+    prompts = np.random.RandomState(0).randint(0, cfg.vocab, (2, 8)).astype(np.int32)
+    a = srv.generate(prompts, ServeConfig(max_new_tokens=4))
+    b = srv.generate(prompts, ServeConfig(max_new_tokens=4))
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (2, 4)
+
+
+def test_gradient_compression_error_feedback():
+    """int8 error-feedback quantization: accumulated error stays bounded and the
+    running sum of dequantized grads tracks the true sum (convergence guarantee)."""
+    rng = np.random.RandomState(0)
+    true_sum = np.zeros(256, np.float32)
+    deq_sum = np.zeros(256, np.float32)
+    err = np.zeros(256, np.float32)
+    for _ in range(200):
+        g = rng.randn(256).astype(np.float32) * 0.01
+        true_sum += g
+        gq = g + err
+        scale = max(np.abs(gq).max(), 1e-12) / 127.0
+        q = np.clip(np.round(gq / scale), -127, 127)
+        deq = q * scale
+        err = gq - deq
+        deq_sum += deq
+    assert np.abs(deq_sum - true_sum).max() < 1e-3

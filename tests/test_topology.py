@@ -1,0 +1,104 @@
+"""Topology / expected-goodput models validated against the paper's own numbers."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topology import LinkGraph, make_paper_node_graphs, make_tpu_pod, make_tpu_multipod
+from repro.core.hw import gbit
+
+
+@pytest.fixture(scope="module")
+def graphs():
+    return make_paper_node_graphs()
+
+
+def test_alps_pair_bandwidth(graphs):
+    # 6 x 200 Gb/s NVLink4 per pair (Table I)
+    assert graphs["alps"].pair_bw(0, 1) == pytest.approx(gbit(1200))
+
+
+def test_leonardo_pair_bandwidth(graphs):
+    assert graphs["leonardo"].pair_bw(0, 1) == pytest.approx(gbit(800))
+
+
+def test_fully_connected_efi_is_one(graphs):
+    # Sec. IV-A: "each link is crossed by only one path"
+    assert graphs["alps"].edge_forwarding_index(per_link=False) == 1
+    assert graphs["leonardo"].edge_forwarding_index(per_link=False) == 1
+
+
+def test_lumi_efi_is_four(graphs):
+    # Sec. IV-A: most loaded links (1,5)/(3,7) carry four paths
+    assert graphs["lumi"].edge_forwarding_index() == pytest.approx(4.0)
+    loads = graphs["lumi"].edge_loads_ecmp()
+    assert loads[(1, 5)] == pytest.approx(4.0)
+    assert loads[(3, 7)] == pytest.approx(4.0)
+
+
+def test_lumi_pair_goodput_100gbs(graphs):
+    assert graphs["lumi"].bottleneck_pair_goodput() == pytest.approx(gbit(100))
+
+
+def test_alltoall_expected_goodputs(graphs):
+    # Alps 3.6 Tb/s, Leonardo 2.4 Tb/s, LUMI 600 Gb/s (Sec. IV-A)
+    assert graphs["alps"].alltoall_expected_goodput() == pytest.approx(gbit(3600))
+    assert graphs["leonardo"].alltoall_expected_goodput() == pytest.approx(gbit(2400))
+    assert graphs["lumi"].alltoall_expected_goodput() == pytest.approx(gbit(600))
+
+
+def test_allreduce_expected_goodputs(graphs):
+    # Alps/Leonardo: pipelined trees => sum of outgoing links; LUMI: 4 rings
+    # Rabenseifner => 800 Gb/s (Sec. IV-C)
+    assert graphs["alps"].allreduce_expected_goodput() == pytest.approx(gbit(3600))
+    assert graphs["leonardo"].allreduce_expected_goodput() == pytest.approx(gbit(2400))
+    assert graphs["lumi"].allreduce_expected_goodput() == pytest.approx(gbit(800))
+
+
+def test_lumi_degree_six_links(graphs):
+    # "any GCD can send data on six different IF links simultaneously"
+    for u in range(8):
+        assert graphs["lumi"].degree_links(u) == 6
+
+
+def test_tpu_pod_alltoall_matches_bisection_bound():
+    pod = make_tpu_pod(16, 16)
+    a2a = pod.alltoall_expected_goodput()
+    # bisection bound: 4 * bisection / n
+    bis = pod.bisection_bw()
+    assert a2a == pytest.approx(4 * bis / 256, rel=0.05)
+
+
+def test_tpu_pod_allreduce_half_injection():
+    pod = make_tpu_pod(16, 16)
+    # ring allreduce: injection/2 = 4 links * 50 GB/s / 2
+    assert pod.allreduce_expected_goodput() == pytest.approx(100e9)
+
+
+def test_multipod_asymptotic_is_dcn_bound():
+    mp = make_tpu_multipod()
+    assert mp.alltoall_asymptotic_goodput() == pytest.approx(gbit(25))
+    assert mp.allreduce_expected_goodput(512) <= mp.intra.allreduce_expected_goodput()
+
+
+@given(n=st.integers(3, 10), links=st.integers(1, 4))
+@settings(max_examples=15, deadline=None)
+def test_fully_connected_efi_property(n, links):
+    g = LinkGraph.fully_connected(n, links, 1e9)
+    assert g.edge_forwarding_index(per_link=False) == pytest.approx(1.0)
+    # alltoall bound equals injection bandwidth
+    assert g.alltoall_expected_goodput() == pytest.approx((n - 1) * links * 1e9)
+
+
+@given(k=st.sampled_from([4, 6, 8]))
+@settings(max_examples=6, deadline=None)
+def test_ring_efi_known_formula(k):
+    # bidirectional ring, ECMP: max directed load = k^2/8 (even k)
+    g = LinkGraph.ring(k, 1e9)
+    assert g.edge_forwarding_index() == pytest.approx(k * k / 8, rel=0.26)
+
+
+def test_torus_symmetry():
+    g = make_tpu_pod(4, 4)
+    loads = g.edge_loads_ecmp().values()
+    assert max(loads) == pytest.approx(min(loads), rel=1e-6)  # edge-transitive
