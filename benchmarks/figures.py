@@ -13,8 +13,8 @@ from .common import emit, run_devices
 
 MEASURE_CODE_TEMPLATE = r"""
 import jax, jax.numpy as jnp, numpy as np, json
+from repro.core import collectives as C  # installs repro.compat jax shims
 from jax.sharding import PartitionSpec as P, AxisType
-from repro.core import collectives as C
 from repro.core.bench import time_fn, p2p_goodput, collective_goodput
 
 mesh = jax.make_mesh((8,), ("x",), axis_types=(AxisType.Auto,))

@@ -80,6 +80,37 @@ def bench_roofline():
     return []
 
 
+def bench_commplan():
+    """CommPlan tables per topology: algorithm crossovers + bucket sizes.
+
+    The planner's answer to paper Obs. 1/Fig. 11 — print where the chosen
+    algorithm flips per (topology, axis size), and the gradient bucket size the
+    latency/bandwidth crossover implies."""
+    from repro.core.commplan import CommPlan
+    from repro.core.topology import (make_paper_node_graphs, make_tpu_multipod,
+                                     make_tpu_pod)
+    from .common import emit
+
+    topos = dict(make_paper_node_graphs())
+    topos["tpu_pod"] = make_tpu_pod()
+    topos["tpu_multipod"] = make_tpu_multipod()
+    rows = []
+    for tname, topo in topos.items():
+        plan = CommPlan.from_topology(topo)
+        for n, entries in sorted(plan.all_reduce_table.items()):
+            desc = " | ".join(
+                f"<=2^{e.max_bytes.bit_length()-1}:{e.algorithm}" if e.max_bytes < 1 << 62
+                else f"rest:{e.algorithm}" for e in entries)
+            rows.append({"name": f"commplan/{tname}/allreduce/n{n}",
+                         "us_per_call": 0.0, "derived": desc})
+        rows.append({"name": f"commplan/{tname}/bucket",
+                     "us_per_call": 0.0,
+                     "derived": f"{plan.bucket_bytes >> 20} MiB"
+                                f" hier={plan.hierarchical}"})
+    emit("commplan", rows, ["name", "us_per_call", "derived"])
+    return rows
+
+
 def main() -> None:
     from .figures import ALL_FIGURES
 
@@ -88,6 +119,7 @@ def main() -> None:
     sections["kernels"] = bench_kernels
     sections["train_step"] = bench_train_step
     sections["roofline"] = bench_roofline
+    sections["commplan"] = bench_commplan
     failures = []
     for name, fn in sections.items():
         if filters and not any(f in name for f in filters):

@@ -20,6 +20,7 @@ sys.path.insert(0, str(ROOT / "src"))
 
 def inner(n_devices: int):
     import jax
+    import repro.compat  # jax API shims before touching jax.sharding
     from jax.sharding import AxisType
 
     from repro.core.bench import print_records, write_csv

@@ -1,0 +1,70 @@
+"""Version compatibility shims for the jax API surface this codebase targets.
+
+The framework is written against the modern API (``jax.shard_map``,
+``jax.sharding.AxisType``, ``jax.make_mesh(..., axis_types=...)``,
+``check_vma=``).  Older jax releases (<= 0.4.x) spell these
+``jax.experimental.shard_map.shard_map`` / ``check_rep=`` and have no axis
+types.  ``install()`` fills the gaps in-place — attributes are only added when
+missing, so on a modern jax this module is a no-op.  It runs from
+``repro/__init__`` so any ``import repro.*`` makes the modern spellings
+available everywhere (including test subprocesses).
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+import jax.sharding
+
+
+def install() -> None:
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        _make_mesh = jax.make_mesh
+
+        @functools.wraps(_make_mesh)
+        def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+            return _make_mesh(axis_shapes, axis_names, **kw)
+
+        jax.make_mesh = make_mesh
+
+    if not hasattr(jax.lax, "axis_size"):
+        def axis_size(axis_name):
+            # psum of a Python literal is evaluated statically, so schedules can
+            # still unroll Python loops over the result
+            return jax.lax.psum(1, axis_name)
+
+        jax.lax.axis_size = axis_size
+
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        @functools.wraps(_shard_map)
+        def shard_map(f, mesh=None, in_specs=None, out_specs=None,
+                      check_vma=None, **kw):
+            if check_vma is not None:
+                kw.setdefault("check_rep", check_vma)
+            return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kw)
+
+        jax.shard_map = shard_map
+
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+    except ImportError:
+        pltpu = None
+    if pltpu is not None and not hasattr(pltpu, "CompilerParams") \
+            and hasattr(pltpu, "TPUCompilerParams"):
+        pltpu.CompilerParams = pltpu.TPUCompilerParams
+
+
+install()

@@ -6,7 +6,8 @@ Public API:
   collectives: ALL_REDUCE_ALGOS, ALL_TO_ALL_ALGOS, hierarchical_all_reduce, ...
   bench:       time_fn, IterStats, BenchRecord, write_csv
   noise:       NoiseModel, ServiceLevelArbiter, StragglerMitigator
-  autotune:    CollectivePolicy, default_policy
+  commplan:    CommPlan, PlanEntry (topology -> dispatch plan, the planning seam)
+  autotune:    CollectivePolicy, default_policy (thin shim over commplan)
   characterize: characterize_mesh, project_at_scale
 """
 from . import hw
@@ -14,11 +15,13 @@ from .topology import LinkGraph, TwoLevelTopology, make_paper_node_graphs, make_
 from .costmodel import CommModel, make_comm_model, crossover_bytes
 from .bench import IterStats, BenchRecord, time_fn, write_csv, gbps
 from .noise import NoiseModel, ServiceLevelArbiter, StragglerMitigator
+from .commplan import CommPlan, PlanEntry
 from .autotune import CollectivePolicy, default_policy
 
 __all__ = [
     "hw", "LinkGraph", "TwoLevelTopology", "make_paper_node_graphs", "make_tpu_pod",
     "make_tpu_multipod", "CommModel", "make_comm_model", "crossover_bytes",
     "IterStats", "BenchRecord", "time_fn", "write_csv", "gbps", "NoiseModel",
-    "ServiceLevelArbiter", "StragglerMitigator", "CollectivePolicy", "default_policy",
+    "ServiceLevelArbiter", "StragglerMitigator", "CommPlan", "PlanEntry",
+    "CollectivePolicy", "default_policy",
 ]

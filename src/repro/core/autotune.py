@@ -1,107 +1,86 @@
 """Collective-algorithm autotuning (paper Obs. 1 + Fig. 11, made automatic).
 
-The paper's headline software finding: the best data-movement mechanism depends on
-message size, endpoint count, and system — with order-of-magnitude stakes — and the
-libraries' defaults get it wrong (NCCL_* env tuning, the ~32 KiB RCCL/MPI
-inversion on LUMI, GDRCopy mispaths...).
+The paper's headline software finding: the best data-movement mechanism depends
+on message size, endpoint count, and system — with order-of-magnitude stakes —
+and the libraries' defaults get it wrong (NCCL_* env tuning, the ~32 KiB
+RCCL/MPI inversion on LUMI, GDRCopy mispaths...).
 
-`CollectivePolicy` is the framework's answer: a persisted (bytes, axis-size) ->
-algorithm table, built either from the analytical cost model (`from_model`) or from
-on-device measurements (`measure`).  The training/serving runtime asks the policy at
-trace time (message sizes are static under jit), so the dispatch is free.
+This module is now a thin builder/persistence shim over `core.commplan`:
+`CollectivePolicy` wraps a topology-derived `CommPlan` (built via `from_model`
+from the cost model's link graph, or via `measure` from on-device timings) and
+keeps the original (bytes, axis-size) -> algorithm JSON format loadable —
+old policy files round-trip unchanged; new saves carry the extra
+reduce-scatter/all-gather tables, bucket size, and hierarchical flag.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
-import math
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 
 from . import collectives as coll
+from .commplan import SIZE_CLASSES, CommPlan, PlanEntry, _is_pow2
 from .costmodel import CommModel, make_comm_model
 
-SIZE_CLASSES = [1 << k for k in range(8, 31, 2)]  # 256 B .. 1 GiB
-
-
-def _is_pow2(n: int) -> bool:
-    return n & (n - 1) == 0
-
-
-@dataclasses.dataclass
-class PolicyEntry:
-    max_bytes: int
-    algorithm: str
+# Backward-compatible name: policy tables are plan tables.
+PolicyEntry = PlanEntry
 
 
 @dataclasses.dataclass
 class CollectivePolicy:
-    """Size-threshold dispatch tables per collective op and axis size."""
+    """Size-threshold dispatch tables per collective op and axis size — the
+    stable public facade; all ranking/dispatch logic lives in `CommPlan`."""
 
-    all_reduce_table: Dict[int, List[PolicyEntry]]
-    all_to_all_table: Dict[int, List[PolicyEntry]]
+    all_reduce_table: Dict[int, List[PlanEntry]]
+    all_to_all_table: Dict[int, List[PlanEntry]]
     meta: Dict[str, str]
+    plan: Optional[CommPlan] = None
+
+    def _as_plan(self) -> CommPlan:
+        """Tables-only policies (legacy JSON, `measure`) get a wrapping plan so
+        every dispatch path is uniform."""
+        if self.plan is None:
+            self.plan = CommPlan(self.all_reduce_table, self.all_to_all_table,
+                                 {}, {}, meta=dict(self.meta))
+        return self.plan
 
     # ------------------------------------------------------------- dispatch
     def all_reduce_algo(self, nbytes: int, axis_size: int) -> str:
-        return self._lookup(self.all_reduce_table, nbytes, axis_size, "xla")
+        return CommPlan.lookup(self.all_reduce_table, nbytes, axis_size, "xla")
 
     def all_to_all_algo(self, nbytes: int, axis_size: int) -> str:
-        return self._lookup(self.all_to_all_table, nbytes, axis_size, "xla")
+        return CommPlan.lookup(self.all_to_all_table, nbytes, axis_size, "xla")
 
-    @staticmethod
-    def _lookup(table: Dict[int, List[PolicyEntry]], nbytes: int, axis_size: int,
-                default: str) -> str:
-        if axis_size not in table:
-            # nearest configured axis size (log distance)
-            if not table:
-                return default
-            axis_size = min(table, key=lambda n: abs(math.log2(n) - math.log2(max(axis_size, 1))))
-        for entry in table[axis_size]:
-            if nbytes <= entry.max_bytes:
-                return entry.algorithm
-        return table[axis_size][-1].algorithm if table[axis_size] else default
+    @property
+    def bucket_bytes(self) -> int:
+        return self._as_plan().bucket_bytes
 
-    def all_reduce(self, x: jnp.ndarray, axis: str, axis_size: int) -> jnp.ndarray:
+    def all_reduce(self, x: jnp.ndarray, axis: str, axis_size: int,
+                   dcn_axis: Optional[str] = None) -> jnp.ndarray:
         """Trace-time dispatch (sizes are static under jit)."""
-        algo = self.all_reduce_algo(x.size * x.dtype.itemsize, axis_size)
-        if not _is_pow2(axis_size) and algo in ("rabenseifner", "recursive_doubling", "tree"):
-            algo = "ring"
-        return coll.ALL_REDUCE_ALGOS[algo](x, axis)
+        return self._as_plan().all_reduce(x, axis, axis_size, dcn_axis=dcn_axis)
 
     def all_to_all(self, x: jnp.ndarray, axis: str, axis_size: int) -> jnp.ndarray:
-        algo = self.all_to_all_algo(x.size * x.dtype.itemsize, axis_size)
-        # Obs. 7: beyond 512 endpoints *CCL alltoall is unstable — force pairwise.
-        if axis_size > 512:
-            algo = "pairwise"
-        return coll.ALL_TO_ALL_ALGOS[algo](x, axis)
+        return self._as_plan().all_to_all(x, axis, axis_size)
 
     # ------------------------------------------------------------ builders
     @staticmethod
+    def from_plan(plan: CommPlan) -> "CollectivePolicy":
+        return CollectivePolicy(plan.all_reduce_table, plan.all_to_all_table,
+                                dict(plan.meta), plan=plan)
+
+    @staticmethod
     def from_model(model: Optional[CommModel] = None,
                    axis_sizes: Tuple[int, ...] = (2, 4, 8, 16, 64, 256, 512)) -> "CollectivePolicy":
-        """Analytical policy from the alpha-beta cost model."""
+        """Topology-derived policy: rank algorithms from the model's link graph
+        (and two-level topology when present) instead of flat constants."""
         model = model or make_comm_model("tpu_v5e")
-        ar: Dict[int, List[PolicyEntry]] = {}
-        a2a: Dict[int, List[PolicyEntry]] = {}
-        for n in axis_sizes:
-            entries: List[PolicyEntry] = []
-            prev_algo = None
-            for s in SIZE_CLASSES:
-                algo = _best_ar_algo(model, s, n)
-                if prev_algo is None:
-                    prev_algo = algo
-                elif algo != prev_algo:
-                    entries.append(PolicyEntry(s // 2, prev_algo))
-                    prev_algo = algo
-            entries.append(PolicyEntry(1 << 62, prev_algo or "xla"))
-            ar[n] = entries
-            a2a[n] = [
-                PolicyEntry(64 * 1024, "xla"),
-                PolicyEntry(1 << 62, "xla" if n <= 512 else "pairwise"),
-            ]
-        return CollectivePolicy(ar, a2a, {"source": "model"})
+        topo = model.two_level or model.graph
+        plan = CommPlan.from_topology(topo, profile=model.profile,
+                                      axis_sizes=axis_sizes)
+        return CollectivePolicy.from_plan(plan)
 
     @staticmethod
     def measure(mesh, axis: str, sizes: Optional[List[int]] = None,
@@ -116,16 +95,17 @@ class CollectivePolicy:
 
         sizes = sizes or [1 << k for k in range(10, 25, 2)]
         n = mesh.shape[axis]
-        entries: List[PolicyEntry] = []
+        specs = coll.registered("all_reduce", multi_axis=False)
+        entries: List[PlanEntry] = []
         results: Dict[int, str] = {}
         for s in sizes:
             elems = max(s // 4, n)
             x = np.random.randn(n, elems // n + 1).astype(np.float32)
             best, best_t = None, float("inf")
-            for name, fn in coll.ALL_REDUCE_ALGOS.items():
-                if not _is_pow2(n) and name in ("rabenseifner", "recursive_doubling", "tree"):
+            for name, spec in specs.items():
+                if spec.pow2_only and not _is_pow2(n):
                     continue
-                f = jax.jit(jax.shard_map(lambda v, fn=fn: fn(v, axis), mesh=mesh,
+                f = jax.jit(jax.shard_map(lambda v, fn=spec.fn: fn(v, axis), mesh=mesh,
                                           in_specs=P(axis), out_specs=P(axis)))
                 st = time_fn(f, x, iters=iters, warmup=3)
                 if st.median < best_t:
@@ -134,21 +114,25 @@ class CollectivePolicy:
         prev = None
         for s in sizes:
             if prev is not None and results[s] != prev:
-                entries.append(PolicyEntry(s // 2, prev))
+                entries.append(PlanEntry(s // 2, prev))
             prev = results[s]
-        entries.append(PolicyEntry(1 << 62, prev or "xla"))
-        return CollectivePolicy({n: entries}, {n: [PolicyEntry(1 << 62, "xla")]},
+        entries.append(PlanEntry(1 << 62, prev or "xla"))
+        return CollectivePolicy({n: entries}, {n: [PlanEntry(1 << 62, "xla")]},
                                 {"source": "measured"})
 
     # --------------------------------------------------------- persistence
     def save(self, path: str) -> None:
-        blob = {
-            "meta": self.meta,
-            "all_reduce": {str(n): [dataclasses.asdict(e) for e in es]
-                           for n, es in self.all_reduce_table.items()},
-            "all_to_all": {str(n): [dataclasses.asdict(e) for e in es]
-                           for n, es in self.all_to_all_table.items()},
-        }
+        if self.plan is not None:
+            blob = self.plan.to_blob()
+            blob["meta"] = {**blob.get("meta", {}), **self.meta}
+        else:
+            blob = {
+                "meta": self.meta,
+                "all_reduce": {str(n): [dataclasses.asdict(e) for e in es]
+                               for n, es in self.all_reduce_table.items()},
+                "all_to_all": {str(n): [dataclasses.asdict(e) for e in es]
+                               for n, es in self.all_to_all_table.items()},
+            }
         with open(path, "w") as f:
             json.dump(blob, f, indent=2)
 
@@ -156,19 +140,13 @@ class CollectivePolicy:
     def load(path: str) -> "CollectivePolicy":
         with open(path) as f:
             blob = json.load(f)
-        parse = lambda d: {int(n): [PolicyEntry(**e) for e in es] for n, es in d.items()}
-        return CollectivePolicy(parse(blob["all_reduce"]), parse(blob["all_to_all"]),
-                                blob.get("meta", {}))
-
-
-def _best_ar_algo(model: CommModel, nbytes: int, n: int) -> str:
-    candidates = {
-        "recursive_doubling": model.allreduce_intra(nbytes, "mpi", "recursive_doubling", n).seconds,
-        "rabenseifner": model.allreduce_intra(nbytes, "mpi", "rabenseifner", n).seconds,
-        "ring": model.allreduce_intra(nbytes, "ccl", "ring", n).seconds,
-        "xla": model.allreduce_intra(nbytes, "ccl", "auto", n).seconds,
-    }
-    return min(candidates, key=candidates.get)
+        if "all_reduce" not in blob or "all_to_all" not in blob:
+            # CommPlan.from_blob is lenient; the policy facade must keep
+            # rejecting non-policy JSON (launchers rely on it for validation)
+            raise KeyError(f"{path}: not a policy file (missing "
+                           f"'all_reduce'/'all_to_all' tables)")
+        # legacy files carry no plan-only fields; from_blob defaults them
+        return CollectivePolicy.from_plan(CommPlan.from_blob(blob))
 
 
 def default_policy() -> CollectivePolicy:

@@ -23,15 +23,64 @@ Algorithms:
   all_to_all_direct / all_to_all_pairwise                      XLA vs chunk-bounded
   hierarchical_all_reduce                                      ICI RS -> DCN AR -> ICI AG
   ping_pong                                                    p2p latency/goodput probe
+
+Every algorithm self-registers in the collective registry (`register` /
+`registered` / `get_collective`); `core.commplan` ranks registry entries with
+topology-derived cost functions instead of hand-maintained candidate dicts.
+`ALL_REDUCE_ALGOS` / `ALL_TO_ALL_ALGOS` remain as single-axis views for
+backward compatibility.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Optional, Sequence
+from typing import Callable, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax import lax
+
+
+# ------------------------------------------------------------------- registry
+@dataclasses.dataclass(frozen=True)
+class CollectiveSpec:
+    """Registry entry: the callable plus the dispatch constraints the planner
+    needs (power-of-two-only schedules, multi-axis hierarchical variants)."""
+
+    name: str
+    kind: str                 # all_reduce | all_to_all | reduce_scatter | all_gather
+    fn: Callable
+    pow2_only: bool = False   # schedule requires a power-of-two axis size
+    multi_axis: bool = False  # fn(x, ici_axis, dcn_axis) instead of fn(x, axis)
+
+
+_REGISTRY: Dict[str, Dict[str, CollectiveSpec]] = {}
+
+
+def register(kind: str, name: str, *, pow2_only: bool = False, multi_axis: bool = False):
+    """Decorator registering a collective implementation under (kind, name)."""
+
+    def deco(fn: Callable) -> Callable:
+        _REGISTRY.setdefault(kind, {})[name] = CollectiveSpec(
+            name, kind, fn, pow2_only=pow2_only, multi_axis=multi_axis)
+        return fn
+
+    return deco
+
+
+def registered(kind: str, *, multi_axis: Optional[bool] = None) -> Dict[str, CollectiveSpec]:
+    specs = _REGISTRY.get(kind, {})
+    if multi_axis is None:
+        return dict(specs)
+    return {n: s for n, s in specs.items() if s.multi_axis == multi_axis}
+
+
+def get_collective(kind: str, name: str) -> CollectiveSpec:
+    try:
+        return _REGISTRY[kind][name]
+    except KeyError:
+        raise KeyError(f"no {kind!r} collective named {name!r}; "
+                       f"registered: {sorted(_REGISTRY.get(kind, {}))}") from None
 
 
 def _axis_n(axis: str) -> int:
@@ -51,6 +100,7 @@ def _pad_to(x: jnp.ndarray, multiple: int):
 
 
 # --------------------------------------------------------------------------- ring
+@register("reduce_scatter", "ring")
 def ring_reduce_scatter(x: jnp.ndarray, axis: str) -> jnp.ndarray:
     """Returns this rank's reduced chunk (flat, len = padded_size/n)."""
     n = _axis_n(axis)
@@ -72,6 +122,7 @@ def ring_reduce_scatter(x: jnp.ndarray, axis: str) -> jnp.ndarray:
     return buf
 
 
+@register("all_gather", "ring")
 def ring_all_gather(chunk: jnp.ndarray, axis: str) -> jnp.ndarray:
     """Each rank contributes `chunk`; returns (n, chunk_shape) gathered in rank order."""
     n = _axis_n(axis)
@@ -86,6 +137,7 @@ def ring_all_gather(chunk: jnp.ndarray, axis: str) -> jnp.ndarray:
     return out
 
 
+@register("all_reduce", "ring")
 def ring_all_reduce(x: jnp.ndarray, axis: str) -> jnp.ndarray:
     """Bandwidth-optimal ring: reduce-scatter + all-gather, 2(n-1)/n bytes/rank."""
     n = _axis_n(axis)
@@ -96,6 +148,7 @@ def ring_all_reduce(x: jnp.ndarray, axis: str) -> jnp.ndarray:
     return full[: x.size].reshape(x.shape).astype(x.dtype)
 
 
+@register("all_reduce", "bidir_ring")
 def bidir_ring_all_reduce(x: jnp.ndarray, axis: str) -> jnp.ndarray:
     """Two counter-rotating rings, each carrying half the buffer — uses both link
     directions (the paper's LUMI bidirectional-ring observation, Sec. IV-C)."""
@@ -143,6 +196,7 @@ def ring_all_gather_dir(chunk: jnp.ndarray, axis: str, shift: int) -> jnp.ndarra
 
 
 # ----------------------------------------------------------------- rabenseifner
+@register("all_reduce", "rabenseifner", pow2_only=True)
 def rabenseifner_all_reduce(x: jnp.ndarray, axis: str) -> jnp.ndarray:
     """Recursive halving reduce-scatter + recursive doubling all-gather
     (Rabenseifner [33]); n must be a power of two.  2(n-1)/n bytes, 2 log2 n steps."""
@@ -188,6 +242,7 @@ def rabenseifner_all_reduce(x: jnp.ndarray, axis: str) -> jnp.ndarray:
 
 
 # ------------------------------------------------------- latency-optimal family
+@register("all_reduce", "recursive_doubling", pow2_only=True)
 def recursive_doubling_all_reduce(x: jnp.ndarray, axis: str) -> jnp.ndarray:
     """log2(n) full-buffer exchanges — latency-optimal for small messages."""
     n = _axis_n(axis)
@@ -203,6 +258,7 @@ def recursive_doubling_all_reduce(x: jnp.ndarray, axis: str) -> jnp.ndarray:
     return acc
 
 
+@register("all_reduce", "tree", pow2_only=True)
 def tree_all_reduce(x: jnp.ndarray, axis: str) -> jnp.ndarray:
     """Binomial-tree reduce to rank 0 followed by binomial broadcast."""
     n = _axis_n(axis)
@@ -228,6 +284,7 @@ def tree_all_reduce(x: jnp.ndarray, axis: str) -> jnp.ndarray:
     return acc
 
 
+@register("all_reduce", "one_shot")
 def one_shot_all_reduce(x: jnp.ndarray, axis: str) -> jnp.ndarray:
     """All-gather everything, reduce locally — the explicit device-device-copy
     analog (paper Sec. IV-D 'reduction on GPU 0 + broadcast' without pipelining)."""
@@ -235,23 +292,41 @@ def one_shot_all_reduce(x: jnp.ndarray, axis: str) -> jnp.ndarray:
     return jnp.sum(g, axis=0).astype(x.dtype)
 
 
+@register("all_reduce", "xla")
 def xla_all_reduce(x: jnp.ndarray, axis: str) -> jnp.ndarray:
     """The *CCL analog: let the platform library schedule it."""
     return lax.psum(x, axis)
 
 
+@register("reduce_scatter", "xla")
+def xla_reduce_scatter(x: jnp.ndarray, axis: str) -> jnp.ndarray:
+    """Platform reduce-scatter; same contract as ring_reduce_scatter (flat chunk
+    of the padded buffer, len = padded_size/n)."""
+    n = _axis_n(axis)
+    flat, _ = _pad_to(x, n)
+    return lax.psum_scatter(flat, axis, scatter_dimension=0, tiled=True)
+
+
+@register("all_gather", "xla")
+def xla_all_gather(chunk: jnp.ndarray, axis: str) -> jnp.ndarray:
+    """Platform all-gather; same contract as ring_all_gather ((n,) + chunk.shape)."""
+    return lax.all_gather(chunk, axis)
+
+
 # ------------------------------------------------------------------- all-to-all
+@register("all_to_all", "xla")
 def all_to_all_direct(x: jnp.ndarray, axis: str) -> jnp.ndarray:
     """XLA all_to_all (the *CCL analog).  x: (n*k, ...) local rows; row block j
     goes to rank j; returns the n received blocks concatenated."""
     return lax.all_to_all(x, axis, split_axis=0, concat_axis=0, tiled=True)
 
 
-def all_to_all_pairwise(x: jnp.ndarray, axis: str, chunk_ranks: int = 0) -> jnp.ndarray:
+@register("all_to_all", "pairwise")
+def all_to_all_pairwise(x: jnp.ndarray, axis: str) -> jnp.ndarray:
     """Pairwise-exchange alltoall over ppermute rotations: n-1 steps, one peer in
     flight per step — the bounded-connection-state fix for the paper's Obs. 7
-    (*CCL alltoall instability beyond 512 endpoints).  Optionally processes peers
-    in groups of `chunk_ranks` (0 = all, still one rotation at a time)."""
+    (*CCL alltoall instability beyond 512 endpoints).  One-peer-in-flight is
+    inherent to the rotation schedule, so no extra chunking knob is needed."""
     n = _axis_n(axis)
     idx = lax.axis_index(axis)
     rows = x.shape[0]
@@ -272,6 +347,7 @@ def all_to_all_pairwise(x: jnp.ndarray, axis: str, chunk_ranks: int = 0) -> jnp.
 
 
 # ------------------------------------------------------------------ hierarchical
+@register("all_reduce", "hierarchical", multi_axis=True)
 def hierarchical_all_reduce(x: jnp.ndarray, ici_axis: str, dcn_axis: str) -> jnp.ndarray:
     """Multi-pod allreduce: intra-pod reduce-scatter (ICI) -> inter-pod allreduce of
     the scattered shard (DCN, 1/n_ici of the bytes) -> intra-pod all-gather (ICI).
@@ -307,17 +383,9 @@ def staged_host_all_reduce(shards: Sequence) -> list:
             for s in shards]
 
 
-ALL_REDUCE_ALGOS = {
-    "xla": xla_all_reduce,
-    "ring": ring_all_reduce,
-    "bidir_ring": bidir_ring_all_reduce,
-    "rabenseifner": rabenseifner_all_reduce,
-    "recursive_doubling": recursive_doubling_all_reduce,
-    "tree": tree_all_reduce,
-    "one_shot": one_shot_all_reduce,
-}
-
-ALL_TO_ALL_ALGOS = {
-    "xla": all_to_all_direct,
-    "pairwise": all_to_all_pairwise,
-}
+# Backward-compatible single-axis views over the registry (multi-axis variants
+# like `hierarchical` dispatch through commplan/`registered` instead).
+ALL_REDUCE_ALGOS = {n: s.fn for n, s in registered("all_reduce", multi_axis=False).items()}
+ALL_TO_ALL_ALGOS = {n: s.fn for n, s in registered("all_to_all", multi_axis=False).items()}
+REDUCE_SCATTER_ALGOS = {n: s.fn for n, s in registered("reduce_scatter", multi_axis=False).items()}
+ALL_GATHER_ALGOS = {n: s.fn for n, s in registered("all_gather", multi_axis=False).items()}

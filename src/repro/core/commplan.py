@@ -1,0 +1,366 @@
+"""Topology-aware collective planning: topology -> cost model -> dispatch plan.
+
+The paper's headline software finding (Obs. 1/4, Fig. 11) is that the best
+collective algorithm depends on message size, endpoint count, *and the topology
+underneath*.  `CommPlan` closes that loop: it is built *from* a `LinkGraph` or
+`TwoLevelTopology` (not from flat alpha-beta constants), ranks every algorithm
+registered in `core.collectives` with topology-derived bandwidths
+(`allreduce_expected_goodput` / `alltoall_expected_goodput` / EFI, paper
+Secs. IV-A/IV-C), and emits size-threshold dispatch tables for all-reduce,
+all-to-all, reduce-scatter, and all-gather.
+
+Two-level topologies (pod x DCN, paper Sec. V) additionally enable the
+hierarchical multi-axis path: whenever the caller can name both an intra
+(ici) and an inter (dcn) mesh axis, dispatch selects
+`collectives.hierarchical_all_reduce` — intra RS, inter AR on 1/n_intra of the
+bytes, intra AG — the bandwidth-correct schedule when DCN << ICI.
+
+The plan also fixes the runtime's **gradient bucket size** from its own
+latency/bandwidth crossover: the byte size where the chosen large-message
+algorithm's per-message latency term drops below ~5% of its bandwidth term
+(the paper's message-aggregation optimization).  `runtime.steps` coalesces the
+flat gradient list into buckets of this size before reduction.
+
+Persistence is JSON, a superset of the legacy `CollectivePolicy` format
+(`core.autotune` is now a thin builder/persistence shim over this module).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Callable, Dict, List, Optional, Tuple, Union
+
+from . import hw
+from . import collectives as coll
+from .costmodel import (CCL_KERNEL_ALPHA, CCL_SMALL_FLOOR,
+                        MECH_EFFICIENCY_COLLECTIVE)
+from .topology import LinkGraph, TwoLevelTopology
+
+SIZE_CLASSES = [1 << k for k in range(8, 31, 2)]  # 256 B .. 1 GiB
+
+# Schedule efficiency: explicit ppermute schedules are derived from the graph,
+# so they achieve most of the topology bound; the vendor ("xla") path is the
+# *CCL analog and uses the calibrated collective efficiency from costmodel.
+EXPLICIT_EFF = 0.90
+XLA_EFF = MECH_EFFICIENCY_COLLECTIVE["ccl"]
+
+DEFAULT_BUCKET_BYTES = 4 << 20
+MIN_BUCKET_BYTES = 256 << 10
+MAX_BUCKET_BYTES = 64 << 20
+
+LOG2 = lambda n: max(1, int(math.ceil(math.log2(max(n, 2)))))
+
+
+def _is_pow2(n: int) -> bool:
+    return n > 0 and n & (n - 1) == 0
+
+
+@dataclasses.dataclass
+class PlanEntry:
+    """One size-threshold row: use `algorithm` for payloads <= max_bytes."""
+    max_bytes: int
+    algorithm: str
+
+
+Table = Dict[int, List[PlanEntry]]
+
+
+def _infer_profile(graph: LinkGraph) -> hw.SystemProfile:
+    """Map a graph back to the system profile that owns its latency constants.
+    Topology gives bandwidth structure; alpha terms must come from hw."""
+    name = graph.name
+    for prefix, system in (("lumi", "lumi"), ("alps", "alps"),
+                           ("leonardo", "leonardo"), ("v5e", "tpu_v5e"),
+                           ("torus", "tpu_v5e"), ("ring", "tpu_v5e")):
+        if name.startswith(prefix):
+            return hw.SYSTEMS[system]
+    return hw.SYSTEMS["tpu_v5e"]
+
+
+# --------------------------------------------------------------- cost ranking
+@dataclasses.dataclass(frozen=True)
+class _TopoBw:
+    """Topology-derived effective bandwidths (bytes/s) feeding the rankers."""
+    allreduce: float      # multi-ring / pipelined-tree capacity (Sec. IV-C)
+    alltoall: float       # injection / EFI bound (Sec. IV-A)
+    hop: float            # bottleneck single hop on a Hamiltonian ring
+    pair: float           # best direct pair
+    pair_bottleneck: float  # concurrent all-pairs goodput (EFI-limited)
+    injection: float
+
+
+def _topo_bw(graph: LinkGraph) -> _TopoBw:
+    fc = graph._is_fully_connected()
+    return _TopoBw(
+        allreduce=graph.allreduce_expected_goodput(),
+        alltoall=graph.alltoall_expected_goodput(),
+        hop=graph.pair_bw(0, 1) if fc else graph.link_bw,
+        pair=graph.pair_bw(0, 1),
+        pair_bottleneck=graph.bottleneck_pair_goodput(),
+        injection=graph.injection_bw(0),
+    )
+
+
+def _ar_costs(bw: _TopoBw, a_exp: float, a_xla: float, n: int, s: float,
+              scale_bw: Optional[float] = None) -> Dict[str, float]:
+    """Seconds per registered all-reduce algorithm; topology enters through
+    `bw`, scale (axis sizes beyond the graph) through `scale_bw`."""
+    frac = (n - 1) / n
+    b_ar = (scale_bw if scale_bw is not None else bw.allreduce) * EXPLICIT_EFF
+    # beyond the graph, every schedule crosses the at-scale bottleneck: the
+    # ring family's per-hop bandwidth degrades along with the aggregate bound
+    b_hop = (min(bw.hop, scale_bw) if scale_bw is not None else bw.hop) * EXPLICIT_EFF
+    return {
+        "ring": 2 * (n - 1) * a_exp + 2 * s * frac / b_hop,
+        "bidir_ring": 2 * (n - 1) * a_exp + s * frac / b_hop,
+        "rabenseifner": 2 * LOG2(n) * a_exp + 2 * s * frac / b_ar,
+        "recursive_doubling": LOG2(n) * a_exp + s * LOG2(n) / (bw.pair_bottleneck * EXPLICIT_EFF),
+        "tree": 2 * LOG2(n) * a_exp + 2 * s / (bw.pair_bottleneck * EXPLICIT_EFF),
+        # explicit one-shot lowers to an all-gather (log-depth) + local reduce
+        "one_shot": LOG2(n) * a_exp + (n - 1) * s / (bw.injection * EXPLICIT_EFF),
+        "xla": max(CCL_SMALL_FLOOR,
+                   2 * LOG2(n) * a_xla + 2 * s * frac
+                   / ((scale_bw if scale_bw is not None else bw.allreduce) * XLA_EFF)),
+    }
+
+
+def _a2a_costs(bw: _TopoBw, a_exp: float, a_xla: float, n: int, s: float,
+               scale_bw: Optional[float] = None) -> Dict[str, float]:
+    b_a2a = (scale_bw if scale_bw is not None else bw.alltoall)
+    b_pair = (min(bw.pair_bottleneck, scale_bw) if scale_bw is not None
+              else bw.pair_bottleneck)
+    return {
+        "pairwise": (n - 1) * (a_exp + (s / n) / (b_pair * EXPLICIT_EFF)),
+        "xla": max(CCL_SMALL_FLOOR,
+                   min(n - 1, 8) * a_xla + s / (b_a2a * XLA_EFF)),
+    }
+
+
+def _rs_costs(bw: _TopoBw, a_exp: float, a_xla: float, n: int, s: float) -> Dict[str, float]:
+    frac = (n - 1) / n
+    return {
+        "ring": (n - 1) * a_exp + s * frac / (bw.hop * EXPLICIT_EFF),
+        "xla": max(CCL_SMALL_FLOOR,
+                   LOG2(n) * a_xla + s * frac / (bw.allreduce * XLA_EFF)),
+    }
+
+
+_COSTS_BY_KIND: Dict[str, Callable[..., Dict[str, float]]] = {
+    "all_reduce": _ar_costs,
+    "all_to_all": _a2a_costs,
+    "reduce_scatter": _rs_costs,
+    "all_gather": _rs_costs,  # mirror of reduce-scatter (same wire pattern)
+}
+
+
+def _rank_entries(kind: str, bw: _TopoBw, a_exp: float, a_xla: float, n: int,
+                  scale_bw: Optional[float] = None) -> List[PlanEntry]:
+    """Compress per-size-class winners into threshold entries, restricted to
+    algorithms actually present in the registry (and pow2-legal for this n)."""
+    specs = coll.registered(kind, multi_axis=False)
+    cost_fn = _COSTS_BY_KIND[kind]
+    extra = {"scale_bw": scale_bw} if kind in ("all_reduce", "all_to_all") else {}
+    entries: List[PlanEntry] = []
+    prev = None
+    for s in SIZE_CLASSES:
+        costs = cost_fn(bw, a_exp, a_xla, n, float(s), **extra)
+        legal = {name: t for name, t in costs.items()
+                 if name in specs and (_is_pow2(n) or not specs[name].pow2_only)}
+        algo = min(legal, key=legal.get)
+        if prev is None:
+            prev = algo
+        elif algo != prev:
+            entries.append(PlanEntry(s // 2, prev))
+            prev = algo
+    entries.append(PlanEntry(1 << 62, prev or "xla"))
+    return entries
+
+
+# -------------------------------------------------------------------- CommPlan
+@dataclasses.dataclass
+class CommPlan:
+    """Complete topology-derived dispatch plan.
+
+    Tables map axis_size -> threshold entries; lookups snap to the nearest
+    configured axis size in log space.  `stats` counts trace-time dispatches
+    (message sizes are static under jit, so this is free and exact)."""
+
+    all_reduce_table: Table
+    all_to_all_table: Table
+    reduce_scatter_table: Table
+    all_gather_table: Table
+    bucket_bytes: int = DEFAULT_BUCKET_BYTES
+    hierarchical: bool = False
+    meta: Dict[str, str] = dataclasses.field(default_factory=dict)
+    stats: Dict[str, int] = dataclasses.field(default_factory=dict, compare=False)
+
+    # ------------------------------------------------------------- builders
+    @classmethod
+    def from_topology(cls, topo: Union[LinkGraph, TwoLevelTopology],
+                      profile: Optional[hw.SystemProfile] = None,
+                      axis_sizes: Optional[Tuple[int, ...]] = None) -> "CommPlan":
+        two_level = isinstance(topo, TwoLevelTopology)
+        graph = topo.intra if two_level else topo
+        profile = profile or _infer_profile(graph)
+        a_exp = profile.intra_latency.mpi
+        a_xla = profile.intra_latency.ccl + CCL_KERNEL_ALPHA
+        bw = _topo_bw(graph)
+        if axis_sizes is None:
+            axis_sizes = tuple(sorted({2, 4, 8, 16, 64, 256, 512, graph.n, topo.n}))
+        ar: Table = {}
+        a2a: Table = {}
+        rs: Table = {}
+        ag: Table = {}
+        for n in axis_sizes:
+            if n < 2:
+                continue
+            # beyond the single-level graph, ring-family bandwidth degrades to
+            # the topology's own at-scale model (Sec. V) when we have one
+            scale_ar = scale_a2a = None
+            if n > graph.n:
+                if two_level:
+                    scale_ar = topo.allreduce_expected_goodput(n)
+                    scale_a2a = topo.alltoall_expected_goodput(n)
+                else:
+                    scale_ar = bw.allreduce
+                    scale_a2a = bw.alltoall
+            ar[n] = _rank_entries("all_reduce", bw, a_exp, a_xla, n, scale_ar)
+            a2a[n] = _rank_entries("all_to_all", bw, a_exp, a_xla, n, scale_a2a)
+            rs[n] = _rank_entries("reduce_scatter", bw, a_exp, a_xla, n)
+            ag[n] = _rank_entries("all_gather", bw, a_exp, a_xla, n)
+        n_full = max(topo.n, 2)
+        slowest = (topo.allreduce_expected_goodput(n_full) if two_level
+                   else bw.allreduce) * EXPLICIT_EFF
+        bucket = _bucket_from_crossover(a_exp, 2 * LOG2(n_full), slowest)
+        meta = {"source": "commplan", "topology": graph.name,
+                "profile": profile.name, "n_endpoints": str(topo.n)}
+        if two_level:
+            meta["n_pods"] = str(topo.n_pods)
+        return cls(ar, a2a, rs, ag, bucket_bytes=bucket, hierarchical=two_level,
+                   meta=meta)
+
+    # -------------------------------------------------------------- lookups
+    @staticmethod
+    def lookup(table: Table, nbytes: int, axis_size: int, default: str = "xla") -> str:
+        if axis_size not in table:
+            if not table:
+                return default
+            axis_size = min(table, key=lambda n: abs(
+                math.log2(n) - math.log2(max(axis_size, 1))))
+        for entry in table[axis_size]:
+            if nbytes <= entry.max_bytes:
+                return entry.algorithm
+        return table[axis_size][-1].algorithm if table[axis_size] else default
+
+    def _algo(self, kind: str, table: Table, nbytes: int, axis_size: int,
+              fallback: str) -> str:
+        algo = self.lookup(table, nbytes, axis_size)
+        spec = coll.registered(kind, multi_axis=False).get(algo)
+        if spec is not None and spec.pow2_only and not _is_pow2(axis_size):
+            algo = fallback
+        return algo
+
+    def all_reduce_algo(self, nbytes: int, axis_size: int, *, dcn: bool = False) -> str:
+        if dcn and self.hierarchical:
+            return "hierarchical"
+        return self._algo("all_reduce", self.all_reduce_table, nbytes, axis_size, "ring")
+
+    def all_to_all_algo(self, nbytes: int, axis_size: int) -> str:
+        # Obs. 7: beyond 512 endpoints *CCL alltoall is unstable — force pairwise.
+        if axis_size > 512:
+            return "pairwise"
+        return self._algo("all_to_all", self.all_to_all_table, nbytes, axis_size, "pairwise")
+
+    def reduce_scatter_algo(self, nbytes: int, axis_size: int) -> str:
+        return self._algo("reduce_scatter", self.reduce_scatter_table, nbytes,
+                          axis_size, "ring")
+
+    def all_gather_algo(self, nbytes: int, axis_size: int) -> str:
+        return self._algo("all_gather", self.all_gather_table, nbytes, axis_size, "ring")
+
+    # ------------------------------------------------------------- dispatch
+    def _count(self, key: str) -> None:
+        self.stats[key] = self.stats.get(key, 0) + 1
+
+    def all_reduce(self, x, axis: str, axis_size: int, dcn_axis: Optional[str] = None):
+        """Trace-time dispatch; with `dcn_axis` on a two-level plan this lowers
+        to the hierarchical intra-RS / inter-AR / intra-AG schedule."""
+        self._count("all_reduce_calls")
+        if dcn_axis is not None and self.hierarchical:
+            self._count("hierarchical_calls")
+            return coll.hierarchical_all_reduce(x, axis, dcn_axis)
+        algo = self.all_reduce_algo(x.size * x.dtype.itemsize, axis_size)
+        out = coll.get_collective("all_reduce", algo).fn(x, axis)
+        if dcn_axis is not None:
+            # single-level plan on a two-axis mesh: finish over the outer axis
+            out = coll.xla_all_reduce(out, dcn_axis)
+        return out
+
+    def all_to_all(self, x, axis: str, axis_size: int):
+        self._count("all_to_all_calls")
+        algo = self.all_to_all_algo(x.size * x.dtype.itemsize, axis_size)
+        return coll.get_collective("all_to_all", algo).fn(x, axis)
+
+    def reduce_scatter(self, x, axis: str, axis_size: int):
+        self._count("reduce_scatter_calls")
+        algo = self.reduce_scatter_algo(x.size * x.dtype.itemsize, axis_size)
+        return coll.get_collective("reduce_scatter", algo).fn(x, axis)
+
+    def all_gather(self, chunk, axis: str, axis_size: int):
+        self._count("all_gather_calls")
+        algo = self.all_gather_algo(chunk.size * chunk.dtype.itemsize * axis_size,
+                                    axis_size)
+        return coll.get_collective("all_gather", algo).fn(chunk, axis)
+
+    def reset_stats(self) -> None:
+        self.stats.clear()
+
+    # ---------------------------------------------------------- persistence
+    def to_blob(self) -> Dict:
+        dump = lambda t: {str(n): [dataclasses.asdict(e) for e in es]
+                          for n, es in t.items()}
+        return {
+            "meta": self.meta,
+            "all_reduce": dump(self.all_reduce_table),
+            "all_to_all": dump(self.all_to_all_table),
+            "reduce_scatter": dump(self.reduce_scatter_table),
+            "all_gather": dump(self.all_gather_table),
+            "bucket_bytes": self.bucket_bytes,
+            "hierarchical": self.hierarchical,
+        }
+
+    @classmethod
+    def from_blob(cls, blob: Dict) -> "CommPlan":
+        """Accepts both the full commplan format and the legacy CollectivePolicy
+        format (all_reduce/all_to_all/meta only)."""
+        parse = lambda d: {int(n): [PlanEntry(**e) for e in es] for n, es in d.items()}
+        return cls(
+            parse(blob.get("all_reduce", {})),
+            parse(blob.get("all_to_all", {})),
+            parse(blob.get("reduce_scatter", {})),
+            parse(blob.get("all_gather", {})),
+            bucket_bytes=int(blob.get("bucket_bytes", DEFAULT_BUCKET_BYTES)),
+            hierarchical=bool(blob.get("hierarchical", False)),
+            meta=dict(blob.get("meta", {})),
+        )
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_blob(), f, indent=2)
+
+    @classmethod
+    def load(cls, path: str) -> "CommPlan":
+        with open(path) as f:
+            return cls.from_blob(json.load(f))
+
+
+def _bucket_from_crossover(alpha: float, steps: int, bandwidth: float) -> int:
+    """Gradient bucket size from the latency/bandwidth crossover: the smallest
+    power-of-two byte count where the per-bucket latency term (steps * alpha)
+    is <= ~5% of the bandwidth term — below this, small tensors pay
+    per-message latency; above it, coalescing stops helping (and delays the
+    first reduction).  Clamped to [256 KiB, 64 MiB]."""
+    target = 19.0 * steps * alpha * bandwidth
+    bucket = 1 << max(int(math.ceil(math.log2(max(target, 1.0)))), 0)
+    return min(max(bucket, MIN_BUCKET_BYTES), MAX_BUCKET_BYTES)

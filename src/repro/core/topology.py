@@ -315,15 +315,8 @@ class TwoLevelTopology:
         """Finite-size correction (Sec. V-C): only the fraction of traffic crossing
         the inter-pod network is limited by DCN."""
         if n_endpoints <= self.intra.n:
-            g = LinkGraph(
-                n_endpoints,
-                {k: v for k, v in self.intra.links.items() if k[0] < n_endpoints and k[1] < n_endpoints},
-                self.intra.link_bw,
-                self.intra.name,
-            )
             # fall back to intra model on a sub-slice (approximate: full-pod EFI)
             return self.intra.alltoall_expected_goodput()
-        pods = (n_endpoints + self.intra.n - 1) // self.intra.n
         frac_inter = (n_endpoints - self.intra.n) / max(n_endpoints - 1, 1)
         return self.dcn_bw / max(frac_inter, 1e-9) if frac_inter < 1 else self.dcn_bw
 

@@ -117,6 +117,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
         ma = compiled.memory_analysis()
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):  # older jax returns [dict]
+            ca = ca[0] if ca else {}
         hlo = compiled.as_text()
         pod_stride = mesh.shape["data"] * mesh.shape["model"] if multi_pod else 0
         colls = hlo_analysis.analyze_collectives(hlo, pod_stride=pod_stride)

@@ -235,8 +235,12 @@ def analyze_collectives(hlo_text: str, pod_stride: int = 0) -> CollectiveStats:
 
 _DEF_RE = re.compile(r"%([\w.\-]+)\s*=\s*((?:\([^)]*\))|\w+\[[\d,]*\](?:\{[^}]*\})?)")
 _PARAM_ANNOT_RE = re.compile(r"([\w.\-]+):\s*((?:\([^)]*\))|\w+\[[\d,]*\](?:\{[^}]*\})?)")
+# operands may carry an inline type (`dot(f32[8,8]{1,0} %a, ...)`) depending on
+# the XLA version's dump style
 _DOT_RE = re.compile(
-    r"=\s*(\w+\[[\d,]*\])[^ ]*\s+dot\(%([\w.\-]+),\s*%([\w.\-]+)\)"
+    r"=\s*(\w+\[[\d,]*\])[^ ]*\s+dot\("
+    r"(?:\w+\[[\d,]*\](?:\{[^}]*\})?\s+)?%([\w.\-]+),\s*"
+    r"(?:\w+\[[\d,]*\](?:\{[^}]*\})?\s+)?%([\w.\-]+)\)"
     r".*?lhs_contracting_dims=\{([\d,]*)\}")
 _FUSED_PREFIXES = ("fused_computation", "wrapped_", "add.", "add_", "max.", "min.",
                    "region_", "and.", "or.")

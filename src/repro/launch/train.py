@@ -2,7 +2,8 @@
 
   PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --shape train_4k \
       --steps 100 [--reduced] [--mesh 2x4] [--microbatches 4] [--resume] \
-      [--residual-shard] [--fused-qkv] [--policy artifacts/policy.json]
+      [--residual-shard] [--fused-qkv] [--policy artifacts/policy.json] \
+      [--explicit-dp] [--bucket-bytes N]
 
 On this CPU container use --reduced (full configs are exercised via the dry-run).
 The mesh string "DxM" builds (data=D, model=M) over the available devices;
@@ -49,6 +50,12 @@ def main(argv=None):
     ap.add_argument("--policy", default=None,
                     help="collective policy JSON (core.autotune); informational "
                          "for the XLA path, binding for explicit-DP runs")
+    ap.add_argument("--explicit-dp", action="store_true",
+                    help="shard_map DP trainer with CommPlan-dispatched gradient "
+                         "collectives (requires a pure-DP mesh: model dim 1)")
+    ap.add_argument("--bucket-bytes", type=int, default=None,
+                    help="gradient bucket size for --explicit-dp (default: the "
+                         "plan's latency/bandwidth crossover; 0 = per-tensor)")
     ap.add_argument("--straggler-threshold", type=float, default=2.5)
     args = ap.parse_args(argv)
 
@@ -67,16 +74,41 @@ def main(argv=None):
     if shape.kind != "train":
         raise SystemExit(f"--shape {args.shape} is a {shape.kind} shape; use launch.serve")
 
-    mesh = parse_mesh(args.mesh) if args.mesh else make_host_mesh()
+    # explicit-DP wants a pure-DP default mesh (model dim 1)
+    mesh = parse_mesh(args.mesh) if args.mesh \
+        else make_host_mesh(model=1 if args.explicit_dp else 0)
+    policy = None
     if args.policy:
-        CollectivePolicy.load(args.policy)  # validated; runtime reads it on demand
+        try:
+            policy = CollectivePolicy.load(args.policy)
+        except FileNotFoundError:
+            raise SystemExit(f"--policy {args.policy}: file not found")
+        except (KeyError, ValueError, TypeError) as e:
+            raise SystemExit(f"--policy {args.policy}: not a policy file ({e})")
+    dcn_axis = None
+    if args.explicit_dp:
+        if mesh is None:
+            raise SystemExit("--explicit-dp needs multiple devices (set "
+                             "XLA_FLAGS=--xla_force_host_platform_device_count=N "
+                             "on a single-device host)")
+        if mesh.shape.get("model", 1) > 1:
+            raise SystemExit("--explicit-dp needs a pure-DP mesh (model dim 1); "
+                             f"got mesh {dict(mesh.shape)}")
+        if mesh.shape.get("pod", 1) > 1:
+            dcn_axis = "pod"  # hierarchical allreduce over DCN when two-level
+    if policy is not None:
+        src = policy.meta.get("source", "?")
+        print(f"policy: {args.policy} (source={src}, "
+              f"bucket={policy.bucket_bytes} B)")
 
     trainer = Trainer(
         cfg, shape,
         OptConfig(peak_lr=args.lr, warmup_steps=args.warmup, decay_steps=args.steps),
         TrainConfig(steps=args.steps, microbatches=args.microbatches,
                     ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir,
-                    log_every=10, straggler_threshold=args.straggler_threshold),
+                    log_every=10, straggler_threshold=args.straggler_threshold,
+                    explicit_dp=args.explicit_dp, dcn_axis=dcn_axis,
+                    policy=policy, bucket_bytes=args.bucket_bytes),
         mesh=mesh,
     )
     result = trainer.run(resume=args.resume)

@@ -41,6 +41,13 @@ class TrainConfig:
     log_every: int = 10
     straggler_threshold: float = 2.5
     straggler_action: str = "log"
+    # explicit-DP path (shard_map + our collectives, paper Obs. 1/4): params
+    # replicated, batch sharded on dp_axis (and dcn_axis on a two-pod mesh)
+    explicit_dp: bool = False
+    dp_axis: str = "data"
+    dcn_axis: Optional[str] = None
+    policy: Optional[object] = None       # core.autotune.CollectivePolicy
+    bucket_bytes: Optional[int] = None    # None = plan crossover, 0 = per-tensor
 
 
 class Trainer:
@@ -62,6 +69,12 @@ class Trainer:
 
     # ----------------------------------------------------------------- build
     def _build(self, mesh):
+        if self.cfg.explicit_dp:
+            if mesh is None:
+                raise ValueError("explicit_dp requires a multi-device mesh; "
+                                 "got mesh=None (single-device host?)")
+            self._build_explicit_dp(mesh)
+            return
         self.model = build_model(self.model_cfg, mesh)
         self.bundle = rsteps.train_step_bundle(self.model, self.shape, self.opt,
                                                microbatches=self.cfg.microbatches)
@@ -71,6 +84,30 @@ class Trainer:
                                    donate_argnums=self.bundle.donate_argnums)
         else:
             self.step_fn = jax.jit(self.bundle.fn, donate_argnums=self.bundle.donate_argnums)
+
+    def _build_explicit_dp(self, mesh):
+        """Explicit-DP: replicated params (model built without mesh constraints),
+        gradients reduced by our CommPlan-dispatched collectives with bucketing.
+        Error-feedback state lives on the trainer, initialized at first step."""
+        c = self.cfg
+        for ax, size in mesh.shape.items():
+            if ax not in (c.dp_axis, c.dcn_axis) and size > 1:
+                raise ValueError(f"explicit_dp needs a pure-DP mesh; axis {ax!r} "
+                                 f"has size {size}")
+        self.model = build_model(self.model_cfg)
+        dp_step = rsteps.build_explicit_dp_step(
+            self.model, self.opt, mesh, c.dp_axis, policy=c.policy,
+            bucket_bytes=c.bucket_bytes, dcn_axis=c.dcn_axis)
+        self._dp_err = None
+
+        def step_fn(params, opt_state, batch):
+            if self._dp_err is None:
+                self._dp_err = rsteps.init_error_state(params)
+            params, opt_state, metrics, self._dp_err = dp_step(
+                params, opt_state, batch, self._dp_err)
+            return params, opt_state, metrics
+
+        self.step_fn = step_fn
 
     def init_state(self, seed: int = 0):
         params = self.model.init(jax.random.PRNGKey(seed))

@@ -5,8 +5,8 @@ from .helpers import run_devices
 
 VALIDATE = r"""
 import jax, jax.numpy as jnp, numpy as np
+from repro.core import collectives as C  # installs repro.compat jax shims
 from jax.sharding import PartitionSpec as P, AxisType
-from repro.core import collectives as C
 
 mesh = jax.make_mesh((8,), ("x",), axis_types=(AxisType.Auto,))
 rng = np.random.RandomState(0)
@@ -64,8 +64,8 @@ def test_collective_algorithms_8dev():
 
 NONPOW2 = r"""
 import jax, jax.numpy as jnp, numpy as np
+from repro.core import collectives as C  # installs repro.compat jax shims
 from jax.sharding import PartitionSpec as P, AxisType
-from repro.core import collectives as C
 mesh = jax.make_mesh((6,), ("x",), axis_types=(AxisType.Auto,))
 rng = np.random.RandomState(1)
 x = rng.randn(6, 11).astype(np.float32)

@@ -6,6 +6,7 @@ from .helpers import run_devices
 
 EXPLICIT_DP = r"""
 import jax, jax.numpy as jnp, numpy as np
+import repro.compat  # jax API shims before touching jax.sharding
 from jax.sharding import AxisType
 from repro.configs import get_config
 from repro.configs.base import ShapeConfig
@@ -56,6 +57,7 @@ def test_explicit_dp_matches_xla_spmd():
 
 RESHARD = r"""
 import jax, jax.numpy as jnp, numpy as np, tempfile
+import repro.compat  # jax API shims before touching jax.sharding
 from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
 from repro.checkpoint import CheckpointManager
 

@@ -66,7 +66,8 @@ def unrolled(w, x):
 
 fs = analyze_cost(jax.jit(scanned).lower(w, x).compile().as_text()).flops
 fu = analyze_cost(jax.jit(unrolled).lower(w, x).compile().as_text()).flops
-xla_s = jax.jit(scanned).lower(w, x).compile().cost_analysis()["flops"]
+ca = jax.jit(scanned).lower(w, x).compile().cost_analysis()
+xla_s = (ca[0] if isinstance(ca, (list, tuple)) else ca)["flops"]
 print("scan:", fs, "unrolled:", fu, "xla_scan:", xla_s)
 assert abs(fs - fu) / fu < 0.05, (fs, fu)
 assert abs(fs - L * 2 * D**3) / (L * 2 * D**3) < 0.05
