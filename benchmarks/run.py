@@ -111,6 +111,54 @@ def bench_commplan():
     return rows
 
 
+def bench_calibrate():
+    """Measured calibration loop: live sweep -> alpha-beta fit -> versioned
+    artifact -> plan re-ranked from measured goodput (the paper's
+    measure-then-model workflow, Sec. III-A feeding Secs. IV-VI)."""
+    import jax
+    import repro.compat  # noqa: F401  (AxisType shim on older jax)
+    from jax.sharding import AxisType
+    from repro.core.calibrate import (CalibrationProfile, compare_to_model,
+                                      plan_table_deltas, run_calibration)
+    from repro.core.commplan import CommPlan
+    from repro.core.costmodel import make_comm_model
+    from .common import emit, out_path
+
+    from repro.core.bench import SMALL_MAX_BYTES
+
+    n = jax.device_count()
+    mesh = jax.make_mesh((n,), ("x",), axis_types=(AxisType.Auto,))
+    model = make_comm_model("tpu_v5e")
+    # largest size must clear SMALL_MAX_BYTES *per endpoint* (sizes are split
+    # across the mesh) or no 'large'-regime fits exist to re-rank from
+    sizes = (1 << 10, 1 << 14, max(1 << 20, 2 * SMALL_MAX_BYTES * n))
+    profile, _records = run_calibration(mesh, "x", sizes=sizes, iters=5,
+                                        model=model)
+    assert any(k.endswith("/large") for k in profile.params), \
+        "sweep produced no bandwidth-regime fits"
+    path = out_path("calibration.json")
+    profile.save(str(path))
+    back = CalibrationProfile.load(str(path))
+    assert back == profile, "calibration artifact failed save/load round-trip"
+    topo = model.two_level or model.graph
+    analytic = CommPlan.from_topology(topo, profile=model.profile)
+    calibrated = CommPlan.from_topology(topo, profile=model.profile,
+                                        calibration=back)
+    deltas = plan_table_deltas(analytic, calibrated)
+    rows = [{"name": f"calibrate/{r['key']}", "us_per_call": r["measured_us"],
+             "derived": f"analytic={r['analytic_us']:.1f}us "
+                        f"ratio={r['ratio']:.2f} r2={r['r2']:.2f}"}
+            for r in compare_to_model(back, model)]
+    rows.append({"name": "calibrate/bucket", "us_per_call": 0.0,
+                 "derived": f"{analytic.bucket_bytes >> 10} -> "
+                            f"{calibrated.bucket_bytes >> 10} KiB"})
+    rows.append({"name": "calibrate/table_deltas", "us_per_call": 0.0,
+                 "derived": f"{len(deltas)} entries re-ranked"
+                            + (f"; e.g. {deltas[0]}" if deltas else "")})
+    emit("calibrate", rows, ["name", "us_per_call", "derived"])
+    return rows
+
+
 def main() -> None:
     from .figures import ALL_FIGURES
 
@@ -120,6 +168,7 @@ def main() -> None:
     sections["train_step"] = bench_train_step
     sections["roofline"] = bench_roofline
     sections["commplan"] = bench_commplan
+    sections["calibrate"] = bench_calibrate
     failures = []
     for name, fn in sections.items():
         if filters and not any(f in name for f in filters):

@@ -24,12 +24,18 @@ def inner(n_devices: int):
     from jax.sharding import AxisType
 
     from repro.core.bench import print_records, write_csv
+    from repro.core.calibrate import (CalibrationProfile, compare_to_model,
+                                      plan_table_deltas, run_calibration)
     from repro.core.characterize import characterize_mesh, project_at_scale
+    from repro.core.commplan import CommPlan
+    from repro.core.costmodel import make_comm_model
     from repro.core.noise import NoiseModel
 
     mesh = jax.make_mesh((n_devices,), ("x",), axis_types=(AxisType.Auto,))
     print(f"== measuring on {n_devices} host devices (ICI analog) ==")
-    report = characterize_mesh(mesh, "x", sizes=(1 << 12, 1 << 16, 1 << 20), iters=20)
+    model = make_comm_model("tpu_v5e")
+    report = characterize_mesh(mesh, "x", sizes=(1 << 12, 1 << 16, 1 << 20),
+                               iters=20, model=model)
     print_records(report.records)
     out = ROOT / "artifacts" / "bench"
     out.mkdir(parents=True, exist_ok=True)
@@ -40,6 +46,32 @@ def inner(n_devices: int):
     print("\n== at-scale projection (Figs. 9/10/13 analog) ==")
     for row in project_at_scale("tpu_v5e", noise=NoiseModel.tpu_dcn()):
         print("  ", row)
+
+    print("\n== calibration (measured alpha-beta fits vs the analytic model) ==")
+    profile, records = run_calibration(mesh, "x",
+                                       sizes=(1 << 12, 1 << 16, 1 << 20),
+                                       iters=20, model=model,
+                                       base_records=report.records)
+    calib_path = out / "calibration.json"
+    profile.save(str(calib_path))
+    assert CalibrationProfile.load(str(calib_path)) == profile
+    write_csv(str(out / "calibration_records.csv"), records)
+    print(f"  artifact: {calib_path} "
+          f"({len(profile.params)} fitted (mechanism, pattern, regime) keys)")
+    for row in compare_to_model(profile, model):
+        print(f"  {row['key']:38s} measured={row['measured_us']:9.1f}us "
+              f"analytic={row['analytic_us']:9.1f}us "
+              f"ratio={row['ratio']:7.2f} r2={row['r2']:.2f}")
+    topo = model.two_level or model.graph
+    analytic_plan = CommPlan.from_topology(topo, profile=model.profile)
+    calibrated_plan = CommPlan.from_topology(topo, profile=model.profile,
+                                             calibration=profile)
+    deltas = plan_table_deltas(analytic_plan, calibrated_plan)
+    print(f"  plan entries re-ranked by the measured profile: {len(deltas)} "
+          f"(bucket {analytic_plan.bucket_bytes >> 10} -> "
+          f"{calibrated_plan.bucket_bytes >> 10} KiB)")
+    for d in deltas[:8]:
+        print(f"    {d}")
 
 
 def main():

@@ -9,6 +9,7 @@ Public API:
   commplan:    CommPlan, PlanEntry (topology -> dispatch plan, the planning seam)
   autotune:    CollectivePolicy, default_policy (thin shim over commplan)
   characterize: characterize_mesh, project_at_scale
+  calibrate:   CalibrationProfile, fit_profile, run_calibration (measured loop)
 """
 from . import hw
 from .topology import LinkGraph, TwoLevelTopology, make_paper_node_graphs, make_tpu_pod, make_tpu_multipod
@@ -17,11 +18,13 @@ from .bench import IterStats, BenchRecord, time_fn, write_csv, gbps
 from .noise import NoiseModel, ServiceLevelArbiter, StragglerMitigator
 from .commplan import CommPlan, PlanEntry
 from .autotune import CollectivePolicy, default_policy
+from .calibrate import CalibrationProfile, FittedParams, fit_profile, run_calibration
 
 __all__ = [
     "hw", "LinkGraph", "TwoLevelTopology", "make_paper_node_graphs", "make_tpu_pod",
     "make_tpu_multipod", "CommModel", "make_comm_model", "crossover_bytes",
     "IterStats", "BenchRecord", "time_fn", "write_csv", "gbps", "NoiseModel",
     "ServiceLevelArbiter", "StragglerMitigator", "CommPlan", "PlanEntry",
-    "CollectivePolicy", "default_policy",
+    "CollectivePolicy", "default_policy", "CalibrationProfile", "FittedParams",
+    "fit_profile", "run_calibration",
 ]

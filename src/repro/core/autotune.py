@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+from pathlib import Path
 from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
@@ -28,6 +29,13 @@ from .costmodel import CommModel, make_comm_model
 PolicyEntry = PlanEntry
 
 
+def calibration_sidecar(policy_path: str) -> str:
+    """Path of the CalibrationProfile artifact persisted alongside a policy
+    JSON: policy.json -> policy.calibration.json."""
+    p = Path(policy_path)
+    return str(p.with_name(p.stem + ".calibration.json"))
+
+
 @dataclasses.dataclass
 class CollectivePolicy:
     """Size-threshold dispatch tables per collective op and axis size — the
@@ -37,6 +45,7 @@ class CollectivePolicy:
     all_to_all_table: Dict[int, List[PlanEntry]]
     meta: Dict[str, str]
     plan: Optional[CommPlan] = None
+    calibration: Optional[object] = None  # calibrate.CalibrationProfile
 
     def _as_plan(self) -> CommPlan:
         """Tables-only policies (legacy JSON, `measure`) get a wrapping plan so
@@ -67,20 +76,24 @@ class CollectivePolicy:
 
     # ------------------------------------------------------------ builders
     @staticmethod
-    def from_plan(plan: CommPlan) -> "CollectivePolicy":
+    def from_plan(plan: CommPlan, calibration: Optional[object] = None) -> "CollectivePolicy":
         return CollectivePolicy(plan.all_reduce_table, plan.all_to_all_table,
-                                dict(plan.meta), plan=plan)
+                                dict(plan.meta), plan=plan, calibration=calibration)
 
     @staticmethod
     def from_model(model: Optional[CommModel] = None,
-                   axis_sizes: Tuple[int, ...] = (2, 4, 8, 16, 64, 256, 512)) -> "CollectivePolicy":
+                   axis_sizes: Tuple[int, ...] = (2, 4, 8, 16, 64, 256, 512),
+                   calibration: Optional[object] = None) -> "CollectivePolicy":
         """Topology-derived policy: rank algorithms from the model's link graph
-        (and two-level topology when present) instead of flat constants."""
+        (and two-level topology when present) instead of flat constants.  With
+        `calibration`, the plan is re-ranked from the measured fits and the
+        profile is persisted alongside the policy JSON on save."""
         model = model or make_comm_model("tpu_v5e")
         topo = model.two_level or model.graph
         plan = CommPlan.from_topology(topo, profile=model.profile,
-                                      axis_sizes=axis_sizes)
-        return CollectivePolicy.from_plan(plan)
+                                      axis_sizes=axis_sizes,
+                                      calibration=calibration)
+        return CollectivePolicy.from_plan(plan, calibration=calibration)
 
     @staticmethod
     def measure(mesh, axis: str, sizes: Optional[List[int]] = None,
@@ -135,6 +148,13 @@ class CollectivePolicy:
             }
         with open(path, "w") as f:
             json.dump(blob, f, indent=2)
+        sidecar = Path(calibration_sidecar(path))
+        if self.calibration is not None:
+            self.calibration.save(str(sidecar))
+        elif sidecar.exists():
+            # an uncalibrated save must not leave a previous run's profile
+            # behind for load() to attach to tables it never produced
+            sidecar.unlink()
 
     @staticmethod
     def load(path: str) -> "CollectivePolicy":
@@ -145,8 +165,19 @@ class CollectivePolicy:
             # rejecting non-policy JSON (launchers rely on it for validation)
             raise KeyError(f"{path}: not a policy file (missing "
                            f"'all_reduce'/'all_to_all' tables)")
+        calibration = None
+        sidecar = calibration_sidecar(path)
+        if Path(sidecar).exists():
+            from .calibrate import CalibrationProfile
+            try:
+                calibration = CalibrationProfile.load(sidecar)
+            except Exception as e:  # the policy tables are still fully usable
+                import warnings
+                warnings.warn(f"ignoring unreadable calibration sidecar "
+                              f"{sidecar}: {e}")
         # legacy files carry no plan-only fields; from_blob defaults them
-        return CollectivePolicy.from_plan(CommPlan.from_blob(blob))
+        return CollectivePolicy.from_plan(CommPlan.from_blob(blob),
+                                          calibration=calibration)
 
 
 def default_policy() -> CollectivePolicy:

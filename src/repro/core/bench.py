@@ -68,9 +68,14 @@ class IterStats:
         }
 
 
+# Latency-dominated vs bandwidth-dominated boundary: drives both the paper's
+# iteration-count schedule and core.calibrate's size regimes.
+SMALL_MAX_BYTES = 64 * 1024
+
+
 def iters_for_size(nbytes: int, lo: int = 100, hi: int = 1000) -> int:
     """Paper: 100..1000 iterations depending on transfer size."""
-    if nbytes <= 64 * 1024:
+    if nbytes <= SMALL_MAX_BYTES:
         return hi
     if nbytes >= 64 * 1024 * 1024:
         return lo
@@ -126,7 +131,8 @@ class BenchRecord:
             "name": self.name, "mechanism": self.mechanism, "pattern": self.pattern,
             "nbytes": self.nbytes, "n_endpoints": self.n_endpoints,
             "goodput_gbps": gbps(self.goodput_bytes_s),
-            "expected_gbps": gbps(self.expected_bytes_s) if self.expected_bytes_s else "",
+            "expected_gbps": gbps(self.expected_bytes_s)
+                             if self.expected_bytes_s is not None else "",
         }
         r.update(self.stats.summary())
         return r
@@ -136,15 +142,21 @@ def write_csv(path: str, records: Sequence[BenchRecord]) -> None:
     if not records:
         return
     rows = [r.row() for r in records]
+    fieldnames: List[str] = []
+    for row in rows:
+        for k in row:
+            if k not in fieldnames:
+                fieldnames.append(k)
     with open(path, "w", newline="") as f:
-        w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+        w = csv.DictWriter(f, fieldnames=fieldnames, restval="")
         w.writeheader()
         w.writerows(rows)
 
 
 def print_records(records: Sequence[BenchRecord]) -> None:
     for r in records:
-        exp = f" expected={gbps(r.expected_bytes_s):8.1f}" if r.expected_bytes_s else ""
+        exp = f" expected={gbps(r.expected_bytes_s):8.1f}" \
+            if r.expected_bytes_s is not None else ""
         print(
             f"{r.name:32s} {r.mechanism:12s} {r.pattern:10s} n={r.n_endpoints:<5d} "
             f"{r.nbytes:>12d}B  {r.stats.median*1e6:10.1f}us  "

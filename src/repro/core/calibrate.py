@@ -1,0 +1,269 @@
+"""Measured calibration loop: fit alpha-beta cost-model parameters from live sweeps.
+
+The paper's workflow is measure-then-model (Sec. III-A feeds Secs. IV-VI): the
+per-iteration benchmark distributions calibrate the alpha-beta models that
+explain the at-scale figures.  This module closes that loop for the repo:
+
+  1. **Sweep** — `run_calibration` drives the live characterization matrix
+     (`characterize.characterize_mesh`) plus the pairwise-p2p concurrency sweep
+     and the ServiceLevelArbiter congestion/incast scenarios on the current
+     mesh;
+  2. **Fit** — for every (mechanism, pattern, size-regime) group of
+     `BenchRecord`s, least-squares-fit t(s) = alpha + s/B over the median
+     per-iteration times (p2p medians are RTT, halved before fitting);
+  3. **Persist** — the fits become a versioned `CalibrationProfile` JSON
+     artifact (schema v1, sorted keys, exact float round-trip);
+  4. **Apply** — `CommModel(..., calibration=profile)` replaces the
+     `MECH_EFFICIENCY*` constants with measured efficiencies, and
+     `CommPlan.from_topology(..., calibration=profile)` re-ranks the dispatch
+     tables and the gradient bucket size from measured goodput.
+
+Size regimes follow the harness's iteration-count boundary: `small` <= 64 KiB
+(latency-dominated), `large` above it (bandwidth-dominated).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from collections import defaultdict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .bench import SMALL_MAX_BYTES, BenchRecord, gbps
+from .characterize import characterize_mesh, congestion_sweep, pairwise_p2p_sweep
+from .commplan import SIZE_CLASSES, CommPlan
+from .costmodel import CommModel, make_comm_model
+
+SCHEMA_VERSION = 1
+
+
+def size_regime(nbytes: int) -> str:
+    return "small" if nbytes <= SMALL_MAX_BYTES else "large"
+
+
+def _key(mechanism: str, pattern: str, regime: str) -> str:
+    return f"{mechanism}/{pattern}/{regime}"
+
+
+@dataclasses.dataclass(frozen=True)
+class FittedParams:
+    """One alpha-beta fit: t(s) = alpha + s / bandwidth."""
+
+    alpha: float        # seconds
+    bandwidth: float    # bytes/s effective
+    r2: float           # goodness of fit on the fitted points
+    n_samples: int
+    min_bytes: int
+    max_bytes: int
+
+    def predict(self, nbytes: float) -> float:
+        return self.alpha + (nbytes / self.bandwidth if self.bandwidth > 0 else 0.0)
+
+
+def fit_alpha_beta(points: Sequence[Tuple[float, float]]) -> FittedParams:
+    """Least-squares fit of t = alpha + s/B over (bytes, seconds) points.
+
+    Degenerate inputs get conservative fallbacks: a single point attributes the
+    whole time to both terms (alpha = t, B = s/t); a non-positive slope (noise)
+    keeps the best observed goodput as B and the fastest time as alpha.
+    """
+    pts = sorted((float(s), float(t)) for s, t in points)
+    if not pts:
+        raise ValueError("fit_alpha_beta needs at least one (bytes, seconds) point")
+    s = np.array([p[0] for p in pts])
+    t = np.array([p[1] for p in pts])
+    if len(pts) == 1 or np.ptp(s) == 0:
+        alpha = float(t.mean())
+        bw = float(s[0] / t.mean()) if t.mean() > 0 else 0.0
+        return FittedParams(alpha, bw, 0.0, len(pts), int(s.min()), int(s.max()))
+    slope, intercept = np.polyfit(s, t, 1)
+    if slope <= 0:
+        alpha = float(t.min())
+        bw = float((s / t).max())
+    elif intercept < 0:
+        # refit through the origin: all time is bandwidth
+        alpha = 0.0
+        bw = float((s * s).sum() / (s * t).sum())
+    else:
+        alpha = float(intercept)
+        bw = float(1.0 / slope)
+    pred = alpha + s / bw if bw > 0 else np.full_like(t, alpha)
+    ss_res = float(((t - pred) ** 2).sum())
+    ss_tot = float(((t - t.mean()) ** 2).sum())
+    r2 = 1.0 - ss_res / ss_tot if ss_tot > 0 else 1.0
+    return FittedParams(alpha, bw, max(r2, 0.0), len(pts), int(s.min()), int(s.max()))
+
+
+@dataclasses.dataclass
+class CalibrationProfile:
+    """Versioned artifact of measured (mechanism, pattern, regime) fits."""
+
+    version: int
+    system: str
+    topology: str
+    n_endpoints: int
+    params: Dict[str, FittedParams]
+    meta: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+    def get(self, mechanism: str, pattern: str,
+            regime: Optional[str] = None) -> Optional[FittedParams]:
+        """Fit for (mechanism, pattern[, regime]); without a regime, prefer the
+        bandwidth-dominated 'large' fit, falling back to 'small'."""
+        if regime is not None:
+            return self.params.get(_key(mechanism, pattern, regime))
+        return (self.params.get(_key(mechanism, pattern, "large"))
+                or self.params.get(_key(mechanism, pattern, "small")))
+
+    def efficiency(self, mechanism: str, pattern: str, nominal_bw: float,
+                   regime: str = "large") -> Optional[float]:
+        """Measured effective bandwidth as a fraction of `nominal_bw`."""
+        fp = self.get(mechanism, pattern, regime)
+        if fp is None or nominal_bw <= 0 or fp.bandwidth <= 0:
+            return None
+        return fp.bandwidth / nominal_bw
+
+    # ---------------------------------------------------------- persistence
+    def to_blob(self) -> Dict:
+        return {
+            "schema_version": self.version,
+            "system": self.system,
+            "topology": self.topology,
+            "n_endpoints": self.n_endpoints,
+            "params": {k: dataclasses.asdict(v) for k, v in sorted(self.params.items())},
+            "meta": self.meta,
+        }
+
+    @classmethod
+    def from_blob(cls, blob: Dict) -> "CalibrationProfile":
+        version = int(blob.get("schema_version", 0))
+        if version != SCHEMA_VERSION:
+            raise ValueError(f"unsupported calibration schema v{version} "
+                             f"(this build reads v{SCHEMA_VERSION})")
+        params = {k: FittedParams(**p) for k, p in blob.get("params", {}).items()}
+        return cls(version=version, system=str(blob.get("system", "")),
+                   topology=str(blob.get("topology", "")),
+                   n_endpoints=int(blob.get("n_endpoints", 0)),
+                   params=params, meta=dict(blob.get("meta", {})))
+
+    def save(self, path: str) -> None:
+        # sorted keys + repr floats => byte-identical across save/load/save
+        with open(path, "w") as f:
+            json.dump(self.to_blob(), f, indent=2, sort_keys=True)
+            f.write("\n")
+
+    @classmethod
+    def load(cls, path: str) -> "CalibrationProfile":
+        with open(path) as f:
+            return cls.from_blob(json.load(f))
+
+
+# ----------------------------------------------------------------------- fit
+def fit_profile(records: Sequence[BenchRecord], system: str = "tpu_v5e",
+                topology: str = "", n_endpoints: int = 0,
+                meta: Optional[Dict[str, str]] = None) -> CalibrationProfile:
+    """Group records by (mechanism, pattern, size regime) and fit each group.
+
+    p2p records carry ping-pong RTTs; the one-way time (RTT/2) is what the
+    alpha-beta model predicts, so they are halved before fitting.
+    """
+    groups: Dict[Tuple[str, str, str], List[Tuple[float, float]]] = defaultdict(list)
+    for r in records:
+        if not r.stats.times:
+            continue
+        t = r.stats.median
+        if r.pattern == "p2p":
+            t /= 2.0
+        if t <= 0:
+            continue
+        groups[(r.mechanism, r.pattern, size_regime(r.nbytes))].append(
+            (float(r.nbytes), float(t)))
+        n_endpoints = max(n_endpoints, r.n_endpoints)
+    params = {_key(m, p, g): fit_alpha_beta(pts)
+              for (m, p, g), pts in groups.items()}
+    return CalibrationProfile(SCHEMA_VERSION, system, topology, n_endpoints,
+                              params, dict(meta or {}))
+
+
+# ---------------------------------------------------------------------- sweep
+def run_calibration(mesh, axis: str = "x",
+                    sizes: Sequence[int] = (1 << 10, 1 << 14, 1 << 18, 1 << 22),
+                    iters: int = 10,
+                    model: Optional[CommModel] = None,
+                    system: str = "tpu_v5e",
+                    base_records: Optional[Sequence[BenchRecord]] = None,
+                    ) -> Tuple[CalibrationProfile, List[BenchRecord]]:
+    """Run the full calibration sweep on a live mesh and fit a profile.
+
+    `base_records` lets callers reuse an existing `characterize_mesh` run; the
+    pairwise-p2p and congestion scenarios always run fresh.
+    Returns (profile, all records that fed the fit).
+    """
+    model = model or make_comm_model(system)
+    if base_records is None:
+        base_records = characterize_mesh(mesh, axis, sizes=sizes, iters=iters,
+                                         model=model).records
+    records = list(base_records)
+    records += pairwise_p2p_sweep(mesh, axis, sizes=tuple(sizes), iters=iters)
+    records += congestion_sweep(records)
+    profile = fit_profile(records, system=model.profile.name,
+                          topology=model.graph.name,
+                          n_endpoints=mesh.shape[axis],
+                          meta={"axis": axis,
+                                "sizes": ",".join(str(s) for s in sizes),
+                                "iters": str(iters)})
+    return profile, records
+
+
+# ------------------------------------------------------------------ reporting
+_PROBE_BYTES = {"small": 4096, "large": 1 << 22}
+
+
+def compare_to_model(profile: CalibrationProfile, model: CommModel) -> List[Dict]:
+    """Analytic-vs-measured delta per fitted key, at one probe size per regime."""
+    n = max(profile.n_endpoints, 2)
+    rows: List[Dict] = []
+    for key, fp in sorted(profile.params.items()):
+        mech, pattern, regime = key.split("/")
+        s = float(_PROBE_BYTES[regime])
+        try:
+            if pattern in ("p2p", "p2p_concurrent", "p2p_congested"):
+                analytic = model.p2p(s, mech).seconds
+            elif pattern == "allreduce":
+                analytic = model.allreduce_intra(s, mech, n=n).seconds
+            elif pattern == "alltoall":
+                analytic = model.alltoall_intra(s, mech, n=n).seconds
+            else:
+                continue
+        except (KeyError, AttributeError):
+            continue
+        measured = fp.predict(s)
+        rows.append({
+            "key": key, "alpha_us": fp.alpha * 1e6, "bw_gbps": gbps(fp.bandwidth),
+            "r2": fp.r2, "n_samples": fp.n_samples,
+            "measured_us": measured * 1e6, "analytic_us": analytic * 1e6,
+            "ratio": measured / analytic if analytic > 0 else math.inf,
+        })
+    return rows
+
+
+def plan_table_deltas(analytic: CommPlan, calibrated: CommPlan,
+                      sizes: Sequence[int] = tuple(SIZE_CLASSES)) -> List[str]:
+    """(op, axis-size, payload) entries where the calibrated plan disagrees
+    with the analytic one — the observable effect of the measured profile."""
+    tables = (
+        ("all_reduce", analytic.all_reduce_table, calibrated.all_reduce_table),
+        ("all_to_all", analytic.all_to_all_table, calibrated.all_to_all_table),
+        ("reduce_scatter", analytic.reduce_scatter_table, calibrated.reduce_scatter_table),
+        ("all_gather", analytic.all_gather_table, calibrated.all_gather_table),
+    )
+    diffs: List[str] = []
+    for op, ta, tc in tables:
+        for n in sorted(set(ta) & set(tc)):
+            for s in sizes:
+                a = CommPlan.lookup(ta, s, n)
+                c = CommPlan.lookup(tc, s, n)
+                if a != c:
+                    diffs.append(f"{op}/n{n}/{s}B: {a} -> {c}")
+    return diffs

@@ -4,12 +4,18 @@ Runs the full matrix {mechanism} x {pattern} x {size} x {scale} on the live devi
 set (host devices in this container; ICI on a real slice), plus the analytical
 at-scale projections, and emits the eight observations with the local evidence.
 
-Used by examples/characterize_comm.py and the figure benchmarks.
+Also provides the calibration-facing scenarios: the nearest/farthest p2p pair
+selection (`p2p_pairs`), the concurrent pairwise-p2p sweep, and the
+ServiceLevelArbiter congestion/incast projections (`core.calibrate` fits
+alpha-beta parameters from all of them).
+
+Used by examples/characterize_comm.py, core/calibrate.py, and the figure
+benchmarks.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -18,7 +24,7 @@ from jax.sharding import PartitionSpec as P
 from . import collectives as coll
 from .bench import BenchRecord, IterStats, collective_goodput, iters_for_size, p2p_goodput, time_fn
 from .costmodel import CommModel, make_comm_model
-from .noise import NoiseModel
+from .noise import NoiseModel, ServiceLevelArbiter, TrafficClass
 from .topology import LinkGraph
 
 
@@ -30,6 +36,35 @@ def _shard_map(fn, mesh, axis):
 class CharacterizationReport:
     records: List[BenchRecord]
     observations: Dict[str, str]
+
+
+def p2p_pairs(graph: Optional[LinkGraph], n: int) -> List[Tuple[int, int]]:
+    """Nearest and farthest endpoint pairs (hop distance) among the first `n`
+    endpoints of `graph` — the paper's p2p sweep covers both extremes of the
+    link graph, not just rank 0's neighbor.  Falls back to a ring assumption
+    when the graph doesn't cover the mesh.  Empty for n < 2."""
+    if n < 2:
+        return []
+    if graph is None or graph.n < n:
+        graph = LinkGraph.ring(n, 1.0)
+    sources = range(n) if n <= 16 else (0,)  # all-pairs is quadratic; cap it
+    best = worst = None
+    for u in sources:
+        dist, _ = graph._bfs_counts(u)
+        for v in range(u + 1, n):
+            d = dist[v]
+            if d == float("inf"):
+                continue
+            if best is None or d < best[0]:
+                best = (d, u, v)
+            if worst is None or d > worst[0]:
+                worst = (d, u, v)
+    if best is None:
+        return [(0, n - 1)]
+    pairs = [(best[1], best[2])]
+    if (worst[1], worst[2]) != pairs[0]:
+        pairs.append((worst[1], worst[2]))
+    return pairs
 
 
 def characterize_mesh(mesh, axis: str = "x",
@@ -47,11 +82,16 @@ def characterize_mesh(mesh, axis: str = "x",
         x = np.random.randn(n, per).astype(np.float32)
         payload = x.nbytes // n
 
-        # --- p2p ping-pong (Fig. 3 analog): explicit ppermute path
-        f = _shard_map(lambda v: coll.ping_pong(v, axis, 0, min(1, n - 1)), mesh, axis)
-        st = time_fn(f, x, iters=iters, warmup=3)
-        records.append(BenchRecord("pingpong", "device_copy", "p2p", payload, n, st,
-                                   p2p_goodput(payload, st.median)))
+        # --- p2p ping-pong (Fig. 3 analog): explicit ppermute path, nearest AND
+        # farthest pair from the link graph (skipped entirely when n < 2 — a
+        # single endpoint would only ping itself)
+        for tag, (a, b) in zip(("near", "far"), p2p_pairs(model.graph, n)):
+            f = _shard_map(lambda v, a=a, b=b: coll.ping_pong(v, axis, a, b),
+                           mesh, axis)
+            st = time_fn(f, x, iters=iters, warmup=3)
+            records.append(BenchRecord(f"pingpong/{tag}_{a}-{b}", "device_copy",
+                                       "p2p", payload, n, st,
+                                       p2p_goodput(payload, st.median)))
 
         # --- allreduce across algorithms (Figs. 5-6 analog)
         for name in ("xla", "ring", "bidir_ring", "rabenseifner", "recursive_doubling",
@@ -88,6 +128,71 @@ def characterize_mesh(mesh, axis: str = "x",
 
     observations = derive_observations(records)
     return CharacterizationReport(records, observations)
+
+
+def pairwise_p2p_sweep(mesh, axis: str = "x",
+                       sizes: Sequence[int] = (1 << 10, 1 << 14, 1 << 18),
+                       iters: int = 20) -> List[BenchRecord]:
+    """Concurrent pairwise exchange: all n endpoints send simultaneously to
+    their (i + shift) peer, one shift per ring distance class.  The congestion-
+    aware complement of the idle-network ping-pong — every link carries traffic
+    at once, so the measured goodput reflects link sharing (EFI, Sec. IV-A)
+    rather than the single-flow best case."""
+    n = mesh.shape[axis]
+    records: List[BenchRecord] = []
+    if n < 2:
+        return records
+    shifts = sorted({1, n // 2, n - 1} - {0})
+    for nbytes in sizes:
+        # `sizes` are total buffer bytes, split across the mesh — the same
+        # convention as characterize_mesh, so fits group comparable payloads
+        per = max(nbytes // 4 // n, 1)
+        x = np.random.randn(n, per).astype(np.float32)
+        payload = per * 4
+        for shift in shifts:
+            perm = [(i, (i + shift) % n) for i in range(n)]
+            f = _shard_map(lambda v, p=perm: jax.lax.ppermute(v, axis, p), mesh, axis)
+            st = time_fn(f, x, iters=iters, warmup=3)
+            records.append(BenchRecord(f"p2p_shift/{shift}", "device_copy",
+                                       "p2p_concurrent", payload, n, st,
+                                       collective_goodput(payload, st.median)))
+    return records
+
+
+def congestion_sweep(p2p_records: Sequence[BenchRecord],
+                     aggressor_factor: float = 2.0,
+                     arbiter: Optional[ServiceLevelArbiter] = None) -> List[BenchRecord]:
+    """Project measured p2p flows through the ServiceLevelArbiter contention
+    model (Sec. VI-A / Fig. 12): a same-SL alltoall aggressor (FIFO sharing)
+    and a cross-SL incast (endpoint-link saturation that SL separation cannot
+    fix).  Emits synthetic BenchRecords whose goodput is the arbiter's victim
+    share — the calibration fit learns a 'congested' effective bandwidth
+    alongside the clean one; `expected_bytes_s` records the uncongested
+    measurement."""
+    base = [r for r in p2p_records if r.pattern in ("p2p", "p2p_concurrent")]
+    out: List[BenchRecord] = []
+    if not base:
+        return out
+    link_bw = max(r.goodput_bytes_s for r in base)
+    arb = arbiter or ServiceLevelArbiter(link_bw=link_bw, endpoint_bw=link_bw / 2.0)
+    for r in base:
+        victim = TrafficClass("victim", 0, r.goodput_bytes_s)
+        same_sl = [TrafficClass("aggressor", 0, aggressor_factor * link_bw)]
+        incast = [TrafficClass("incast", 1, aggressor_factor * link_bw)]
+        scenarios = (
+            ("same_sl", arb.victim_goodput(victim, same_sl, "alltoall")),
+            ("incast", arb.victim_goodput(victim, incast, "incast")),
+        )
+        # ping-pong stats are RTTs; p2p_concurrent stats are one-way.  Emit
+        # uniformly one-way times so the p2p_congested fit is not a 2x mix.
+        one_way = 0.5 if r.pattern == "p2p" else 1.0
+        for tag, goodput in scenarios:
+            scale = one_way * r.goodput_bytes_s / max(goodput, 1e-9)
+            st = IterStats([t * scale for t in r.stats.times])
+            out.append(BenchRecord(f"congestion/{tag}/{r.name}", r.mechanism,
+                                   "p2p_congested", r.nbytes, r.n_endpoints, st,
+                                   goodput, expected_bytes_s=r.goodput_bytes_s))
+    return out
 
 
 def derive_observations(records: List[BenchRecord]) -> Dict[str, str]:

@@ -103,46 +103,53 @@ def _topo_bw(graph: LinkGraph) -> _TopoBw:
 
 
 def _ar_costs(bw: _TopoBw, a_exp: float, a_xla: float, n: int, s: float,
-              scale_bw: Optional[float] = None) -> Dict[str, float]:
+              scale_bw: Optional[float] = None, eff_exp: float = EXPLICIT_EFF,
+              eff_xla: float = XLA_EFF,
+              floor_xla: float = CCL_SMALL_FLOOR) -> Dict[str, float]:
     """Seconds per registered all-reduce algorithm; topology enters through
-    `bw`, scale (axis sizes beyond the graph) through `scale_bw`."""
+    `bw`, scale (axis sizes beyond the graph) through `scale_bw`, measured
+    calibration through the eff/floor overrides."""
     frac = (n - 1) / n
-    b_ar = (scale_bw if scale_bw is not None else bw.allreduce) * EXPLICIT_EFF
+    b_ar = (scale_bw if scale_bw is not None else bw.allreduce) * eff_exp
     # beyond the graph, every schedule crosses the at-scale bottleneck: the
     # ring family's per-hop bandwidth degrades along with the aggregate bound
-    b_hop = (min(bw.hop, scale_bw) if scale_bw is not None else bw.hop) * EXPLICIT_EFF
+    b_hop = (min(bw.hop, scale_bw) if scale_bw is not None else bw.hop) * eff_exp
     return {
         "ring": 2 * (n - 1) * a_exp + 2 * s * frac / b_hop,
         "bidir_ring": 2 * (n - 1) * a_exp + s * frac / b_hop,
         "rabenseifner": 2 * LOG2(n) * a_exp + 2 * s * frac / b_ar,
-        "recursive_doubling": LOG2(n) * a_exp + s * LOG2(n) / (bw.pair_bottleneck * EXPLICIT_EFF),
-        "tree": 2 * LOG2(n) * a_exp + 2 * s / (bw.pair_bottleneck * EXPLICIT_EFF),
+        "recursive_doubling": LOG2(n) * a_exp + s * LOG2(n) / (bw.pair_bottleneck * eff_exp),
+        "tree": 2 * LOG2(n) * a_exp + 2 * s / (bw.pair_bottleneck * eff_exp),
         # explicit one-shot lowers to an all-gather (log-depth) + local reduce
-        "one_shot": LOG2(n) * a_exp + (n - 1) * s / (bw.injection * EXPLICIT_EFF),
-        "xla": max(CCL_SMALL_FLOOR,
+        "one_shot": LOG2(n) * a_exp + (n - 1) * s / (bw.injection * eff_exp),
+        "xla": max(floor_xla,
                    2 * LOG2(n) * a_xla + 2 * s * frac
-                   / ((scale_bw if scale_bw is not None else bw.allreduce) * XLA_EFF)),
+                   / ((scale_bw if scale_bw is not None else bw.allreduce) * eff_xla)),
     }
 
 
 def _a2a_costs(bw: _TopoBw, a_exp: float, a_xla: float, n: int, s: float,
-               scale_bw: Optional[float] = None) -> Dict[str, float]:
+               scale_bw: Optional[float] = None, eff_exp: float = EXPLICIT_EFF,
+               eff_xla: float = XLA_EFF,
+               floor_xla: float = CCL_SMALL_FLOOR) -> Dict[str, float]:
     b_a2a = (scale_bw if scale_bw is not None else bw.alltoall)
     b_pair = (min(bw.pair_bottleneck, scale_bw) if scale_bw is not None
               else bw.pair_bottleneck)
     return {
-        "pairwise": (n - 1) * (a_exp + (s / n) / (b_pair * EXPLICIT_EFF)),
-        "xla": max(CCL_SMALL_FLOOR,
-                   min(n - 1, 8) * a_xla + s / (b_a2a * XLA_EFF)),
+        "pairwise": (n - 1) * (a_exp + (s / n) / (b_pair * eff_exp)),
+        "xla": max(floor_xla,
+                   min(n - 1, 8) * a_xla + s / (b_a2a * eff_xla)),
     }
 
 
-def _rs_costs(bw: _TopoBw, a_exp: float, a_xla: float, n: int, s: float) -> Dict[str, float]:
+def _rs_costs(bw: _TopoBw, a_exp: float, a_xla: float, n: int, s: float,
+              eff_exp: float = EXPLICIT_EFF, eff_xla: float = XLA_EFF,
+              floor_xla: float = CCL_SMALL_FLOOR) -> Dict[str, float]:
     frac = (n - 1) / n
     return {
-        "ring": (n - 1) * a_exp + s * frac / (bw.hop * EXPLICIT_EFF),
-        "xla": max(CCL_SMALL_FLOOR,
-                   LOG2(n) * a_xla + s * frac / (bw.allreduce * XLA_EFF)),
+        "ring": (n - 1) * a_exp + s * frac / (bw.hop * eff_exp),
+        "xla": max(floor_xla,
+                   LOG2(n) * a_xla + s * frac / (bw.allreduce * eff_xla)),
     }
 
 
@@ -155,7 +162,9 @@ _COSTS_BY_KIND: Dict[str, Callable[..., Dict[str, float]]] = {
 
 
 def _rank_entries(kind: str, bw: _TopoBw, a_exp: float, a_xla: float, n: int,
-                  scale_bw: Optional[float] = None) -> List[PlanEntry]:
+                  scale_bw: Optional[float] = None, eff_exp: float = EXPLICIT_EFF,
+                  eff_xla: float = XLA_EFF,
+                  floor_xla: float = CCL_SMALL_FLOOR) -> List[PlanEntry]:
     """Compress per-size-class winners into threshold entries, restricted to
     algorithms actually present in the registry (and pow2-legal for this n)."""
     specs = coll.registered(kind, multi_axis=False)
@@ -164,7 +173,8 @@ def _rank_entries(kind: str, bw: _TopoBw, a_exp: float, a_xla: float, n: int,
     entries: List[PlanEntry] = []
     prev = None
     for s in SIZE_CLASSES:
-        costs = cost_fn(bw, a_exp, a_xla, n, float(s), **extra)
+        costs = cost_fn(bw, a_exp, a_xla, n, float(s), eff_exp=eff_exp,
+                        eff_xla=eff_xla, floor_xla=floor_xla, **extra)
         legal = {name: t for name, t in costs.items()
                  if name in specs and (_is_pow2(n) or not specs[name].pow2_only)}
         algo = min(legal, key=legal.get)
@@ -199,13 +209,23 @@ class CommPlan:
     @classmethod
     def from_topology(cls, topo: Union[LinkGraph, TwoLevelTopology],
                       profile: Optional[hw.SystemProfile] = None,
-                      axis_sizes: Optional[Tuple[int, ...]] = None) -> "CommPlan":
+                      axis_sizes: Optional[Tuple[int, ...]] = None,
+                      calibration: Optional[object] = None) -> "CommPlan":
+        """Rank the registry from topology-derived bandwidths.  With
+        `calibration` (a `calibrate.CalibrationProfile`), the analytic alpha
+        constants and schedule efficiencies are replaced by the measured fits,
+        so tables and bucket size reflect the machine the sweep ran on."""
         two_level = isinstance(topo, TwoLevelTopology)
         graph = topo.intra if two_level else topo
         profile = profile or _infer_profile(graph)
         a_exp = profile.intra_latency.mpi
         a_xla = profile.intra_latency.ccl + CCL_KERNEL_ALPHA
         bw = _topo_bw(graph)
+        effs = {kind: (EXPLICIT_EFF, XLA_EFF) for kind in _COSTS_BY_KIND}
+        floor_xla = CCL_SMALL_FLOOR
+        if calibration is not None:
+            a_exp, a_xla, effs, floor_xla = _calibrated_params(
+                calibration, bw, a_exp, a_xla, floor_xla)
         if axis_sizes is None:
             axis_sizes = tuple(sorted({2, 4, 8, 16, 64, 256, 512, graph.n, topo.n}))
         ar: Table = {}
@@ -225,18 +245,26 @@ class CommPlan:
                 else:
                     scale_ar = bw.allreduce
                     scale_a2a = bw.alltoall
-            ar[n] = _rank_entries("all_reduce", bw, a_exp, a_xla, n, scale_ar)
-            a2a[n] = _rank_entries("all_to_all", bw, a_exp, a_xla, n, scale_a2a)
-            rs[n] = _rank_entries("reduce_scatter", bw, a_exp, a_xla, n)
-            ag[n] = _rank_entries("all_gather", bw, a_exp, a_xla, n)
+            rank = lambda kind, scale=None: _rank_entries(
+                kind, bw, a_exp, a_xla, n, scale, eff_exp=effs[kind][0],
+                eff_xla=effs[kind][1], floor_xla=floor_xla)
+            ar[n] = rank("all_reduce", scale_ar)
+            a2a[n] = rank("all_to_all", scale_a2a)
+            rs[n] = rank("reduce_scatter")
+            ag[n] = rank("all_gather")
         n_full = max(topo.n, 2)
         slowest = (topo.allreduce_expected_goodput(n_full) if two_level
-                   else bw.allreduce) * EXPLICIT_EFF
+                   else bw.allreduce) * effs["all_reduce"][0]
         bucket = _bucket_from_crossover(a_exp, 2 * LOG2(n_full), slowest)
         meta = {"source": "commplan", "topology": graph.name,
                 "profile": profile.name, "n_endpoints": str(topo.n)}
         if two_level:
             meta["n_pods"] = str(topo.n_pods)
+        if calibration is not None:
+            meta["source"] = "commplan+calibration"
+            meta["calibration"] = (f"v{getattr(calibration, 'version', '?')}/"
+                                   f"{getattr(calibration, 'system', '?')}/"
+                                   f"n{getattr(calibration, 'n_endpoints', '?')}")
         return cls(ar, a2a, rs, ag, bucket_bytes=bucket, hierarchical=two_level,
                    meta=meta)
 
@@ -353,6 +381,43 @@ class CommPlan:
     def load(cls, path: str) -> "CommPlan":
         with open(path) as f:
             return cls.from_blob(json.load(f))
+
+
+def _calibrated_params(cal, bw: _TopoBw, a_exp: float, a_xla: float,
+                       floor_xla: float):
+    """Map a CalibrationProfile's measured alpha-beta fits onto the ranker's
+    parameters.
+
+    * explicit-schedule alpha <- measured one-way small-message p2p latency
+      (the ppermute hop every explicit algorithm pays per step);
+    * xla alpha <- measured small-regime *CCL-analog allreduce latency divided
+      by the model's 2*log2(n_meas) step count; the raw fit doubles as the
+      small-message floor (the measured kernel-launch floor);
+    * schedule efficiencies <- measured large-regime goodput relative to the
+      topology bound, per (pattern, mechanism).  Deliberately NOT clamped to
+      1.0: the plan ranks relative measured goodput, and on hosts whose real
+      fabric differs from the modeled one the measurement is the truth.
+    """
+    n_meas = max(getattr(cal, "n_endpoints", 2), 2)
+    fp = cal.get("device_copy", "p2p", "small") or cal.get("mpi", "p2p", "small")
+    if fp is not None and fp.alpha > 0:
+        a_exp = fp.alpha
+    fx = cal.get("ccl", "allreduce", "small")
+    if fx is not None and fx.alpha > 0:
+        a_xla = fx.alpha / (2 * LOG2(n_meas))
+        floor_xla = fx.alpha
+
+    def eff(mech, pattern, bound, default):
+        ratio = cal.efficiency(mech, pattern, bound)
+        return max(ratio, 1e-6) if ratio is not None else default
+
+    eff_ar = (eff("mpi", "allreduce", bw.allreduce, EXPLICIT_EFF),
+              eff("ccl", "allreduce", bw.allreduce, XLA_EFF))
+    eff_a2a = (eff("mpi", "alltoall", bw.alltoall, EXPLICIT_EFF),
+               eff("ccl", "alltoall", bw.alltoall, XLA_EFF))
+    effs = {"all_reduce": eff_ar, "all_to_all": eff_a2a,
+            "reduce_scatter": eff_ar, "all_gather": eff_ar}
+    return a_exp, a_xla, effs, floor_xla
 
 
 def _bucket_from_crossover(alpha: float, steps: int, bandwidth: float) -> int:

@@ -18,6 +18,10 @@ and the large-scale regime uses the asymptotic per-endpoint inter-node bandwidth
 come from `hw.SystemProfile` — they encode the software-layer observations (Obs. 2,
 4, 5, 7): *CCL-like stacks pay a kernel-launch alpha but win on intra-node bandwidth;
 MPI-like stacks win small-message latency; staging is store-and-forward.
+
+The `MECH_EFFICIENCY*` tables below are paper-derived *defaults*: a measured
+`calibrate.CalibrationProfile` passed to `CommModel(..., calibration=...)`
+replaces them (and the intra-node alphas) with live fits from this machine.
 """
 from __future__ import annotations
 
@@ -76,13 +80,47 @@ class CollectiveCost:
 
 
 class CommModel:
-    """Cost model for one system (intra 'node'/pod graph + inter fabric)."""
+    """Cost model for one system (intra 'node'/pod graph + inter fabric).
+
+    With `calibration` (a `calibrate.CalibrationProfile`), the hard-coded
+    `MECH_EFFICIENCY*` fractions and intra-node alpha constants are replaced by
+    the measured fits wherever the profile covers them: per-mechanism p2p fits
+    override pair bandwidth efficiency and intra latency; per-mechanism
+    allreduce/alltoall fits override the collective efficiencies (clamped to
+    <= 1.0 of the topology bound — the bound is physical)."""
 
     def __init__(self, profile: hw.SystemProfile, node_graph: LinkGraph,
-                 two_level: Optional[TwoLevelTopology] = None):
+                 two_level: Optional[TwoLevelTopology] = None,
+                 calibration: Optional[object] = None):
         self.profile = profile
         self.graph = node_graph
         self.two_level = two_level
+        self.calibration = calibration
+        self._eff_pair = dict(MECH_EFFICIENCY)
+        self._eff_coll_ar = dict(MECH_EFFICIENCY_COLLECTIVE)
+        self._eff_coll_a2a = dict(MECH_EFFICIENCY_COLLECTIVE)
+        self._alpha_intra: Dict[str, float] = {}
+        if calibration is not None:
+            self._apply_calibration(calibration)
+
+    def _apply_calibration(self, cal) -> None:
+        clamp = lambda x: min(max(x, 1e-4), 1.0)
+        for mech in self._eff_pair:
+            eff = cal.efficiency(mech, "p2p", self.profile.pair_bw)
+            if eff is not None:
+                self._eff_pair[mech] = clamp(eff)
+            fa = cal.get(mech, "p2p", "small")
+            if fa is not None and fa.alpha > 0:
+                self._alpha_intra[mech] = fa.alpha
+        ar_bound = self.graph.allreduce_expected_goodput()
+        a2a_bound = self.graph.alltoall_expected_goodput()
+        for mech in MECH_EFFICIENCY_COLLECTIVE:
+            ar = cal.efficiency(mech, "allreduce", ar_bound)
+            if ar is not None:
+                self._eff_coll_ar[mech] = clamp(ar)
+            a2a = cal.efficiency(mech, "alltoall", a2a_bound)
+            if a2a is not None:
+                self._eff_coll_a2a[mech] = clamp(a2a)
 
     # ----- mechanism plumbing ------------------------------------------------
     def _alpha(self, mechanism: str, inter_node: bool, distance: str = "same_switch") -> float:
@@ -98,6 +136,8 @@ class CommModel:
             if mechanism == "staging":
                 base += 10e-6
             return base
+        if mechanism in self._alpha_intra:
+            return self._alpha_intra[mechanism]
         lat = p.intra_latency
         return getattr(lat, mechanism)
 
@@ -107,7 +147,7 @@ class CommModel:
             return p.host_staging_bw * MECH_EFFICIENCY["staging"]
         if inter_node:
             return p.nic_bw * MECH_EFFICIENCY_P2P_INTER[mechanism]
-        return p.pair_bw * MECH_EFFICIENCY[mechanism]
+        return p.pair_bw * self._eff_pair[mechanism]
 
     # ----- point-to-point (Figs. 3, 7, 8) ------------------------------------
     def p2p(self, s: float, mechanism: str = "mpi", inter_node: bool = False,
@@ -125,7 +165,7 @@ class CommModel:
                         n: Optional[int] = None) -> CollectiveCost:
         n = n or self.graph.n
         a = self._alpha(mechanism, False)
-        eff = MECH_EFFICIENCY_COLLECTIVE.get(mechanism, 0.5)
+        eff = self._eff_coll_ar.get(mechanism, 0.5)
         peak = self.graph.allreduce_expected_goodput() * eff
         floor = CCL_SMALL_FLOOR if mechanism == "ccl" else 0.0
         if algorithm == "auto":
@@ -151,7 +191,7 @@ class CommModel:
         """s_total: bytes each endpoint sends in total (paper's 'buffer size')."""
         n = n or self.graph.n
         a = self._alpha(mechanism, False)
-        eff = MECH_EFFICIENCY_COLLECTIVE.get(mechanism, 0.5)
+        eff = self._eff_coll_a2a.get(mechanism, 0.5)
         peak = self.graph.alltoall_expected_goodput() * eff
         if mechanism == "staging":
             return CollectiveCost(a + 2 * n * s_total / (self.profile.host_staging_bw * 0.9), 2 * n * s_total)
@@ -166,7 +206,7 @@ class CommModel:
         p = self.profile
         nn = p.endpoints_per_node
         a = self._alpha(mechanism, True, "diff_group")
-        eff = MECH_EFFICIENCY_COLLECTIVE.get(mechanism, 0.5)
+        eff = self._eff_coll_a2a.get(mechanism, 0.5)
         if n_endpoints <= nn:
             return self.alltoall_intra(s_total, mechanism, n_endpoints)
         frac_inter = (n_endpoints - nn) / (n_endpoints - 1)
@@ -185,7 +225,7 @@ class CommModel:
         nn = p.endpoints_per_node
         if n_endpoints <= nn:
             return self.allreduce_intra(s, mechanism)
-        eff = MECH_EFFICIENCY_COLLECTIVE.get(mechanism, 0.5)
+        eff = self._eff_coll_ar.get(mechanism, 0.5)
         a = self._alpha(mechanism, True, "diff_group")
         # hierarchical: intra reduce-scatter, inter ring over n_nodes, intra allgather
         n_nodes = n_endpoints // nn
@@ -198,13 +238,14 @@ class CommModel:
         return CollectiveCost(intra + inter, 2 * s)
 
 
-def make_comm_model(system: str = "tpu_v5e") -> CommModel:
+def make_comm_model(system: str = "tpu_v5e", calibration: Optional[object] = None) -> CommModel:
     from .topology import make_paper_node_graphs, make_tpu_pod, make_tpu_multipod
 
     prof = hw.SYSTEMS[system]
     if system == "tpu_v5e":
-        return CommModel(prof, make_tpu_pod(), make_tpu_multipod())
-    return CommModel(prof, make_paper_node_graphs()[system])
+        return CommModel(prof, make_tpu_pod(), make_tpu_multipod(),
+                         calibration=calibration)
+    return CommModel(prof, make_paper_node_graphs()[system], calibration=calibration)
 
 
 def crossover_bytes(model: CommModel, n: int, mech_a: str = "ccl", mech_b: str = "mpi",

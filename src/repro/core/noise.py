@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import statistics
 from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
@@ -57,8 +58,13 @@ class NoiseModel:
                           p95_latency=60e-6, max_latency=500e-6)
 
     def sample_latency(self, rng: np.random.Generator, n: int) -> np.ndarray:
-        """Per-message one-way latencies (s)."""
-        mu = math.log(self.base_latency)
+        """Per-message one-way latencies (s).
+
+        `base_latency` is the *mean* the paper reports (4.23 us, Sec. V-B), so
+        the lognormal location must be shifted: E[lognormal(mu, sigma)] =
+        exp(mu + sigma^2/2), hence mu = log(base) - sigma^2/2.  (log(base)
+        alone would make `base_latency` the median.)"""
+        mu = math.log(self.base_latency) - self.sigma ** 2 / 2.0
         samples = rng.lognormal(mean=mu, sigma=self.sigma, size=n)
         return np.minimum(samples, self.max_latency)
 
@@ -129,7 +135,8 @@ class StragglerEvent:
 
 
 class StragglerMitigator:
-    """Per-step time tracker with EWMA baseline and deviation threshold.
+    """Per-step time tracker: EWMA baseline (seeded from the warmup-window
+    median) and deviation threshold.
 
     Actions (paper Sec. VI applied to training): 'log' (record), 'sync' (insert a
     barrier to resynchronize pipelines), 'skip' (drop the step's gradient — only
@@ -145,18 +152,18 @@ class StragglerMitigator:
         self.action = action
         self.callback = callback
         self._baseline: Optional[float] = None
-        self._seen = 0
+        self._warmup: List[float] = []
         self.events: List[StragglerEvent] = []
 
     def observe(self, step: int, step_time: float) -> Optional[StragglerEvent]:
-        self._seen += 1
-        if self._baseline is None:
-            self._baseline = step_time
+        if len(self._warmup) < max(self.warmup_steps, 1):
+            # Seed the baseline from the *median* of the warmup window, not the
+            # first observation: step 0 is typically compile-heavy, and seeding
+            # from it inflates the baseline enough to mask early stragglers.
+            self._warmup.append(step_time)
+            self._baseline = float(statistics.median(self._warmup))
             return None
-        is_straggler = (
-            self._seen > self.warmup_steps
-            and step_time > self.threshold * self._baseline
-        )
+        is_straggler = step_time > self.threshold * self._baseline
         ev = None
         if is_straggler:
             ev = StragglerEvent(step, step_time, self._baseline, step_time / self._baseline)

@@ -3,6 +3,7 @@
   PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --shape train_4k \
       --steps 100 [--reduced] [--mesh 2x4] [--microbatches 4] [--resume] \
       [--residual-shard] [--fused-qkv] [--policy artifacts/policy.json] \
+      [--calibration artifacts/bench/calibration.json] \
       [--explicit-dp] [--bucket-bytes N]
 
 On this CPU container use --reduced (full configs are exercised via the dry-run).
@@ -50,6 +51,10 @@ def main(argv=None):
     ap.add_argument("--policy", default=None,
                     help="collective policy JSON (core.autotune); informational "
                          "for the XLA path, binding for explicit-DP runs")
+    ap.add_argument("--calibration", default=None,
+                    help="measured CalibrationProfile JSON (core.calibrate); "
+                         "builds a policy re-ranked from the measured fits "
+                         "(mutually exclusive with --policy)")
     ap.add_argument("--explicit-dp", action="store_true",
                     help="shard_map DP trainer with CommPlan-dispatched gradient "
                          "collectives (requires a pure-DP mesh: model dim 1)")
@@ -78,6 +83,10 @@ def main(argv=None):
     mesh = parse_mesh(args.mesh) if args.mesh \
         else make_host_mesh(model=1 if args.explicit_dp else 0)
     policy = None
+    if args.policy and args.calibration:
+        raise SystemExit("--policy and --calibration are mutually exclusive "
+                         "(a policy file already carries its tables; "
+                         "--calibration re-ranks them from the measured fits)")
     if args.policy:
         try:
             policy = CollectivePolicy.load(args.policy)
@@ -85,6 +94,24 @@ def main(argv=None):
             raise SystemExit(f"--policy {args.policy}: file not found")
         except (KeyError, ValueError, TypeError) as e:
             raise SystemExit(f"--policy {args.policy}: not a policy file ({e})")
+    if args.calibration:
+        from ..core import hw
+        from ..core.calibrate import CalibrationProfile
+        from ..core.costmodel import make_comm_model
+        try:
+            profile = CalibrationProfile.load(args.calibration)
+        except FileNotFoundError:
+            raise SystemExit(f"--calibration {args.calibration}: file not found")
+        except (KeyError, ValueError, TypeError) as e:
+            raise SystemExit(f"--calibration {args.calibration}: "
+                             f"not a calibration file ({e})")
+        # re-rank the topology the profile was measured against, not a default
+        system = profile.system if profile.system in hw.SYSTEMS else "tpu_v5e"
+        policy = CollectivePolicy.from_model(make_comm_model(system),
+                                             calibration=profile)
+        print(f"calibration: {args.calibration} (schema v{profile.version}, "
+              f"system={system}, {len(profile.params)} fitted keys) -> "
+              f"re-ranked plan, bucket={policy.bucket_bytes} B")
     dcn_axis = None
     if args.explicit_dp:
         if mesh is None:
@@ -98,7 +125,7 @@ def main(argv=None):
             dcn_axis = "pod"  # hierarchical allreduce over DCN when two-level
     if policy is not None:
         src = policy.meta.get("source", "?")
-        print(f"policy: {args.policy} (source={src}, "
+        print(f"policy: {args.policy or args.calibration} (source={src}, "
               f"bucket={policy.bucket_bytes} B)")
 
     trainer = Trainer(

@@ -47,6 +47,31 @@ def test_crossover_exists_on_lumi():
     assert x is not None and 4 * 1024 <= x <= 64 * 1024 * 1024
 
 
+def test_crossover_alltoall_op():
+    # the op="alltoall" path has its own cost functions; the inversion exists
+    # there too, earlier than allreduce's (fewer serialized phases)
+    m = make_comm_model("lumi")
+    x = crossover_bytes(m, 64, op="alltoall")
+    assert x is not None and 1024 <= x <= 16 * 1024 * 1024
+    assert x <= crossover_bytes(m, 64, op="allreduce")
+
+
+def test_crossover_none_when_one_mechanism_dominates():
+    m = make_comm_model("lumi")
+    # GPU-aware MPI beats host staging at every size: no inversion to find
+    assert crossover_bytes(m, 64, "mpi", "staging") is None
+    # degenerate: a mechanism never beats itself
+    assert crossover_bytes(m, 64, "ccl", "ccl") is None
+
+
+def test_crossover_within_search_range():
+    # returned size is always one of the probed powers of two (64 B .. 2 GiB)
+    for op in ("allreduce", "alltoall"):
+        x = crossover_bytes(make_comm_model("leonardo"), 64, op=op)
+        if x is not None:
+            assert 64 <= x <= 2 << 30 and x & (x - 1) == 0
+
+
 def test_alltoall_asymptote_injection_bw():
     # Sec. V-C: at-scale alltoall goodput -> per-endpoint inter-node bandwidth
     m = make_comm_model("leonardo")
@@ -114,6 +139,27 @@ def test_straggler_mitigator():
     assert len(sm.events) == 1 and sm.events[0].step == 6
     # baseline not polluted by the straggler
     assert sm.baseline == pytest.approx(1.0, rel=0.1)
+
+
+def test_lognormal_mean_matches_base_latency():
+    """Regression: base_latency is the *mean* the paper reports (4.23 us,
+    Sec. V-B), not the median — mu must be log(base) - sigma^2/2."""
+    import numpy as np
+    for nm in (NoiseModel.leonardo_diff_group(), NoiseModel.tpu_dcn(),
+               NoiseModel.isolated()):
+        s = nm.sample_latency(np.random.default_rng(1), 200_000)
+        assert abs(s.mean() - nm.base_latency) / nm.base_latency < 0.05
+
+
+def test_straggler_baseline_seeded_from_warmup_median():
+    """Regression: a compile-heavy step 0 must not inflate the baseline and
+    mask early stragglers — the seed is the warmup-window median."""
+    sm = StragglerMitigator(threshold=2.0, warmup_steps=3)
+    times = [10.0, 1.0, 1.0, 1.0, 2.6, 1.0]
+    for i, t in enumerate(times):
+        sm.observe(i, t)
+    assert [e.step for e in sm.events] == [4]
+    assert sm.baseline == pytest.approx(1.0, rel=0.2)
 
 
 @given(st.floats(1e3, 1e9))
