@@ -132,10 +132,20 @@ def bench_calibrate():
     # largest size must clear SMALL_MAX_BYTES *per endpoint* (sizes are split
     # across the mesh) or no 'large'-regime fits exist to re-rank from
     sizes = (1 << 10, 1 << 14, max(1 << 20, 2 * SMALL_MAX_BYTES * n))
+    # emulate 2-endpoint nodes on the host mesh so the inter-tier sweep has
+    # same_switch and diff_group pairs to classify (the TPU fabric's 256-chip
+    # pods would make every host-device pair same_node)
+    from repro.core.topology import Fabric
+    bench_fabric = (Fabric("bench_df", "dragonfly", 2, 2, 1, max(n // 4, 2),
+                           model.profile.nic_bw, model.profile.nic_bw)
+                    if n >= 4 else None)
     profile, _records = run_calibration(mesh, "x", sizes=sizes, iters=5,
-                                        model=model)
+                                        model=model, fabric=bench_fabric)
     assert any(k.endswith("/large") for k in profile.params), \
         "sweep produced no bandwidth-regime fits"
+    if bench_fabric is not None:
+        assert any("@" in k for k in profile.params), \
+            "fabric tier sweep produced no tier-qualified fits"
     path = out_path("calibration.json")
     profile.save(str(path))
     back = CalibrationProfile.load(str(path))
@@ -159,6 +169,38 @@ def bench_calibrate():
     return rows
 
 
+def bench_at_scale():
+    """At-scale scenario suite (paper Secs. V-VI): weak/strong scaling of
+    allreduce/alltoall from 8 to 4096 endpoints over the three paper fabrics
+    plus the TPU multipod, with the qualitative paper-shape self-checks.
+
+    Closed-form over the Fabric layer — runs in seconds, so CI sweeps the
+    full endpoint range."""
+    from repro.core.bench import gbps
+    from repro.core.scenarios import (PAPER_SYSTEMS, at_scale_suite,
+                                      check_paper_shapes)
+    from .common import emit
+
+    rows = []
+    for system in PAPER_SYSTEMS:
+        checks = check_paper_shapes(system)
+        bad = [k for k, ok in checks.items() if not ok]
+        assert not bad, f"{system}: paper-shape checks failed: {bad}"
+        rows.append({"name": f"at_scale/{system}/shape_checks",
+                     "us_per_call": 0.0,
+                     "derived": f"{len(checks)} ok"})
+    for p in at_scale_suite(mechanisms=("ccl",)):
+        if p.scaling == "weak":
+            rows.append({
+                "name": f"at_scale/{p.system}/{p.collective}/n{p.n_endpoints}",
+                "us_per_call": p.seconds * 1e6,
+                "derived": f"goodput={gbps(p.goodput_bytes_s):.1f}Gbps "
+                           f"noisy={gbps(p.noisy_goodput_bytes_s):.1f} "
+                           f"bound={gbps(p.bound_bytes_s):.1f} tier={p.tier}"})
+    emit("at_scale", rows, ["name", "us_per_call", "derived"])
+    return rows
+
+
 def main() -> None:
     from .figures import ALL_FIGURES
 
@@ -169,6 +211,7 @@ def main() -> None:
     sections["roofline"] = bench_roofline
     sections["commplan"] = bench_commplan
     sections["calibrate"] = bench_calibrate
+    sections["at_scale"] = bench_at_scale
     failures = []
     for name, fn in sections.items():
         if filters and not any(f in name for f in filters):

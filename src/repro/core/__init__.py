@@ -1,7 +1,8 @@
 """repro.core — the paper's contribution (interconnect characterization), TPU-native.
 
 Public API:
-  topology:    LinkGraph, TwoLevelTopology, make_paper_node_graphs, make_tpu_pod
+  topology:    LinkGraph, Fabric, TwoLevelTopology, make_paper_systems, make_tpu_pod
+  scenarios:   at_scale_suite, check_paper_shapes (Sec. V-VI sweeps, 8..4096 eps)
   costmodel:   CommModel, make_comm_model, crossover_bytes
   collectives: ALL_REDUCE_ALGOS, ALL_TO_ALL_ALGOS, hierarchical_all_reduce, ...
   bench:       time_fn, IterStats, BenchRecord, write_csv
@@ -12,8 +13,11 @@ Public API:
   calibrate:   CalibrationProfile, fit_profile, run_calibration (measured loop)
 """
 from . import hw
-from .topology import LinkGraph, TwoLevelTopology, make_paper_node_graphs, make_tpu_pod, make_tpu_multipod
+from .topology import (Fabric, LinkGraph, TwoLevelTopology, make_paper_fabrics,
+                       make_paper_node_graphs, make_paper_systems, make_tpu_pod,
+                       make_tpu_multipod)
 from .costmodel import CommModel, make_comm_model, crossover_bytes
+from .scenarios import ScenarioPoint, at_scale_suite, check_paper_shapes, sweep_collective
 from .bench import IterStats, BenchRecord, time_fn, write_csv, gbps
 from .noise import NoiseModel, ServiceLevelArbiter, StragglerMitigator
 from .commplan import CommPlan, PlanEntry
@@ -21,8 +25,10 @@ from .autotune import CollectivePolicy, default_policy
 from .calibrate import CalibrationProfile, FittedParams, fit_profile, run_calibration
 
 __all__ = [
-    "hw", "LinkGraph", "TwoLevelTopology", "make_paper_node_graphs", "make_tpu_pod",
+    "hw", "Fabric", "LinkGraph", "TwoLevelTopology", "make_paper_fabrics",
+    "make_paper_node_graphs", "make_paper_systems", "make_tpu_pod",
     "make_tpu_multipod", "CommModel", "make_comm_model", "crossover_bytes",
+    "ScenarioPoint", "at_scale_suite", "check_paper_shapes", "sweep_collective",
     "IterStats", "BenchRecord", "time_fn", "write_csv", "gbps", "NoiseModel",
     "ServiceLevelArbiter", "StragglerMitigator", "CommPlan", "PlanEntry",
     "CollectivePolicy", "default_policy", "CalibrationProfile", "FittedParams",

@@ -125,6 +125,7 @@ class BenchRecord:
     stats: IterStats
     goodput_bytes_s: float
     expected_bytes_s: Optional[float] = None
+    tier: Optional[str] = None   # fabric distance tier (inter-node sweeps)
 
     def row(self) -> Dict[str, object]:
         r = {
@@ -133,6 +134,7 @@ class BenchRecord:
             "goodput_gbps": gbps(self.goodput_bytes_s),
             "expected_gbps": gbps(self.expected_bytes_s)
                              if self.expected_bytes_s is not None else "",
+            "tier": self.tier or "",
         }
         r.update(self.stats.summary())
         return r

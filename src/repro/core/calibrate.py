@@ -32,7 +32,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .bench import SMALL_MAX_BYTES, BenchRecord, gbps
-from .characterize import characterize_mesh, congestion_sweep, pairwise_p2p_sweep
+from .characterize import (characterize_mesh, congestion_sweep,
+                           inter_tier_p2p_sweep, pairwise_p2p_sweep)
 from .commplan import SIZE_CLASSES, CommPlan
 from .costmodel import CommModel, make_comm_model
 
@@ -43,8 +44,20 @@ def size_regime(nbytes: int) -> str:
     return "small" if nbytes <= SMALL_MAX_BYTES else "large"
 
 
-def _key(mechanism: str, pattern: str, regime: str) -> str:
-    return f"{mechanism}/{pattern}/{regime}"
+def _key(mechanism: str, pattern: str, regime: str,
+         tier: Optional[str] = None) -> str:
+    """Fit-group key.  Tier-qualified keys (`mech/pattern/regime@tier`) hold
+    inter-node fits per fabric distance class (same_switch / same_group /
+    diff_group); untiered keys are the intra-node fits of schema v1."""
+    base = f"{mechanism}/{pattern}/{regime}"
+    return f"{base}@{tier}" if tier else base
+
+
+def split_key(key: str) -> Tuple[str, str, str, Optional[str]]:
+    """Inverse of `_key`: (mechanism, pattern, regime, tier-or-None)."""
+    mechanism, pattern, rest = key.split("/", 2)
+    regime, _, tier = rest.partition("@")
+    return mechanism, pattern, regime, tier or None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,18 +121,22 @@ class CalibrationProfile:
     meta: Dict[str, str] = dataclasses.field(default_factory=dict)
 
     def get(self, mechanism: str, pattern: str,
-            regime: Optional[str] = None) -> Optional[FittedParams]:
-        """Fit for (mechanism, pattern[, regime]); without a regime, prefer the
-        bandwidth-dominated 'large' fit, falling back to 'small'."""
+            regime: Optional[str] = None,
+            tier: Optional[str] = None) -> Optional[FittedParams]:
+        """Fit for (mechanism, pattern[, regime][, tier]); without a regime,
+        prefer the bandwidth-dominated 'large' fit, falling back to 'small'.
+        A tier asks for the tier-qualified inter-node fit only (no silent
+        fallback to the intra fit — callers decide that)."""
         if regime is not None:
-            return self.params.get(_key(mechanism, pattern, regime))
-        return (self.params.get(_key(mechanism, pattern, "large"))
-                or self.params.get(_key(mechanism, pattern, "small")))
+            return self.params.get(_key(mechanism, pattern, regime, tier))
+        return (self.params.get(_key(mechanism, pattern, "large", tier))
+                or self.params.get(_key(mechanism, pattern, "small", tier)))
 
     def efficiency(self, mechanism: str, pattern: str, nominal_bw: float,
-                   regime: str = "large") -> Optional[float]:
+                   regime: str = "large",
+                   tier: Optional[str] = None) -> Optional[float]:
         """Measured effective bandwidth as a fraction of `nominal_bw`."""
-        fp = self.get(mechanism, pattern, regime)
+        fp = self.get(mechanism, pattern, regime, tier)
         if fp is None or nominal_bw <= 0 or fp.bandwidth <= 0:
             return None
         return fp.bandwidth / nominal_bw
@@ -166,9 +183,12 @@ def fit_profile(records: Sequence[BenchRecord], system: str = "tpu_v5e",
     """Group records by (mechanism, pattern, size regime) and fit each group.
 
     p2p records carry ping-pong RTTs; the one-way time (RTT/2) is what the
-    alpha-beta model predicts, so they are halved before fitting.
+    alpha-beta model predicts, so they are halved before fitting.  Records
+    tagged with a fabric `tier` fit into tier-qualified groups (the inter-node
+    distance classes), separate from the untiered intra fits.
     """
-    groups: Dict[Tuple[str, str, str], List[Tuple[float, float]]] = defaultdict(list)
+    groups: Dict[Tuple[str, str, str, Optional[str]],
+                 List[Tuple[float, float]]] = defaultdict(list)
     for r in records:
         if not r.stats.times:
             continue
@@ -177,11 +197,12 @@ def fit_profile(records: Sequence[BenchRecord], system: str = "tpu_v5e",
             t /= 2.0
         if t <= 0:
             continue
-        groups[(r.mechanism, r.pattern, size_regime(r.nbytes))].append(
+        tier = getattr(r, "tier", None)
+        groups[(r.mechanism, r.pattern, size_regime(r.nbytes), tier)].append(
             (float(r.nbytes), float(t)))
         n_endpoints = max(n_endpoints, r.n_endpoints)
-    params = {_key(m, p, g): fit_alpha_beta(pts)
-              for (m, p, g), pts in groups.items()}
+    params = {_key(m, p, g, tier): fit_alpha_beta(pts)
+              for (m, p, g, tier), pts in groups.items()}
     return CalibrationProfile(SCHEMA_VERSION, system, topology, n_endpoints,
                               params, dict(meta or {}))
 
@@ -193,11 +214,15 @@ def run_calibration(mesh, axis: str = "x",
                     model: Optional[CommModel] = None,
                     system: str = "tpu_v5e",
                     base_records: Optional[Sequence[BenchRecord]] = None,
+                    fabric: Optional[object] = None,
                     ) -> Tuple[CalibrationProfile, List[BenchRecord]]:
     """Run the full calibration sweep on a live mesh and fit a profile.
 
     `base_records` lets callers reuse an existing `characterize_mesh` run; the
-    pairwise-p2p and congestion scenarios always run fresh.
+    pairwise-p2p and congestion scenarios always run fresh.  With a `fabric`
+    (a `topology.Fabric`; defaults to the model's), the per-distance-tier p2p
+    sweep runs too, producing tier-qualified fit keys (`mech/p2p/*@tier`) so
+    the measured loop covers the inter tiers, not just intra.
     Returns (profile, all records that fed the fit).
     """
     model = model or make_comm_model(system)
@@ -206,6 +231,9 @@ def run_calibration(mesh, axis: str = "x",
                                          model=model).records
     records = list(base_records)
     records += pairwise_p2p_sweep(mesh, axis, sizes=tuple(sizes), iters=iters)
+    if fabric is not None:
+        records += inter_tier_p2p_sweep(mesh, axis, fabric, sizes=tuple(sizes),
+                                        iters=iters)
     records += congestion_sweep(records)
     profile = fit_profile(records, system=model.profile.name,
                           topology=model.graph.name,
@@ -221,15 +249,18 @@ _PROBE_BYTES = {"small": 4096, "large": 1 << 22}
 
 
 def compare_to_model(profile: CalibrationProfile, model: CommModel) -> List[Dict]:
-    """Analytic-vs-measured delta per fitted key, at one probe size per regime."""
+    """Analytic-vs-measured delta per fitted key, at one probe size per regime.
+    Tier-qualified keys compare against the model's inter-node path at that
+    distance tier."""
     n = max(profile.n_endpoints, 2)
     rows: List[Dict] = []
     for key, fp in sorted(profile.params.items()):
-        mech, pattern, regime = key.split("/")
+        mech, pattern, regime, tier = split_key(key)
         s = float(_PROBE_BYTES[regime])
         try:
             if pattern in ("p2p", "p2p_concurrent", "p2p_congested"):
-                analytic = model.p2p(s, mech).seconds
+                analytic = (model.p2p(s, mech, inter_node=True, distance=tier)
+                            if tier else model.p2p(s, mech)).seconds
             elif pattern == "allreduce":
                 analytic = model.allreduce_intra(s, mech, n=n).seconds
             elif pattern == "alltoall":

@@ -159,6 +159,40 @@ def pairwise_p2p_sweep(mesh, axis: str = "x",
     return records
 
 
+def inter_tier_p2p_sweep(mesh, axis: str = "x", fabric=None,
+                         sizes: Sequence[int] = (1 << 10, 1 << 14, 1 << 18),
+                         iters: int = 20) -> List[BenchRecord]:
+    """Per-distance-tier p2p sweep: one ping-pong pair per fabric tier
+    (same_switch / same_group / diff_group), endpoints classified by
+    `fabric.distance`.  On the host-device container every tier measures the
+    same physical path — the value of the sweep is the tier-qualified fit
+    keys (`mech/p2p/*@tier`) it feeds `calibrate.fit_profile`, which a real
+    multi-node deployment fills with genuinely different numbers."""
+    n = mesh.shape[axis]
+    records: List[BenchRecord] = []
+    if fabric is None or n < 2:
+        return records
+    # first endpoint pair observed at each inter tier under packed placement
+    pair_by_tier = {}
+    for b in range(1, n):
+        tier = fabric.distance(0, b)
+        if tier != "same_node" and tier not in pair_by_tier:
+            pair_by_tier[tier] = (0, b)
+    for nbytes in sizes:
+        per = max(nbytes // 4 // n, 1)
+        x = np.random.randn(n, per).astype(np.float32)
+        payload = per * 4
+        for tier, (a, b) in sorted(pair_by_tier.items()):
+            f = _shard_map(lambda v, a=a, b=b: coll.ping_pong(v, axis, a, b),
+                           mesh, axis)
+            st = time_fn(f, x, iters=iters, warmup=3)
+            records.append(BenchRecord(f"pingpong/{tier}_{a}-{b}", "device_copy",
+                                       "p2p", payload, n, st,
+                                       p2p_goodput(payload, st.median),
+                                       tier=tier))
+    return records
+
+
 def congestion_sweep(p2p_records: Sequence[BenchRecord],
                      aggressor_factor: float = 2.0,
                      arbiter: Optional[ServiceLevelArbiter] = None) -> List[BenchRecord]:
@@ -243,6 +277,7 @@ def project_at_scale(system: str = "tpu_v5e",
             ar = model.allreduce_at_scale(allreduce_bytes, n, mech)
             row = {
                 "system": system, "endpoints": n, "mechanism": mech,
+                "tier": model.fabric.tier_for_scale(n) if model.fabric else "",
                 "alltoall_goodput_gbps": alltoall_bytes / a2a.seconds * 8 / 1e9,
                 "allreduce_goodput_gbps": allreduce_bytes / ar.seconds * 8 / 1e9,
             }

@@ -203,6 +203,9 @@ class CommPlan:
     bucket_bytes: int = DEFAULT_BUCKET_BYTES
     hierarchical: bool = False
     meta: Dict[str, str] = dataclasses.field(default_factory=dict)
+    # axis_size -> fabric distance tier the tables were ranked at ("intra" for
+    # sizes inside the node/pod graph); empty for single-level plans.
+    tiers: Dict[int, str] = dataclasses.field(default_factory=dict)
     stats: Dict[str, int] = dataclasses.field(default_factory=dict, compare=False)
 
     # ------------------------------------------------------------- builders
@@ -228,25 +231,39 @@ class CommPlan:
                 calibration, bw, a_exp, a_xla, floor_xla)
         if axis_sizes is None:
             axis_sizes = tuple(sorted({2, 4, 8, 16, 64, 256, 512, graph.n, topo.n}))
+        fabric = topo.fabric if two_level else None
         ar: Table = {}
         a2a: Table = {}
         rs: Table = {}
         ag: Table = {}
+        tiers: Dict[int, str] = {}
         for n in axis_sizes:
             if n < 2:
                 continue
             # beyond the single-level graph, ring-family bandwidth degrades to
-            # the topology's own at-scale model (Sec. V) when we have one
+            # the topology's own at-scale model (Sec. V) when we have one, and
+            # the step latency rises to the spanned distance tier's alpha —
+            # tables are ranked per (endpoint count, distance tier)
             scale_ar = scale_a2a = None
+            a_exp_n, a_xla_n = a_exp, a_xla
             if n > graph.n:
                 if two_level:
                     scale_ar = topo.allreduce_expected_goodput(n)
                     scale_a2a = topo.alltoall_expected_goodput(n)
+                    tier = fabric.tier_for_scale(n)
+                    tiers[n] = tier
+                    a_tier = getattr(profile, f"inter_latency_{tier}", None) \
+                        if tier != "same_node" else None
+                    if a_tier is not None:
+                        a_exp_n = max(a_exp, a_tier)
+                        a_xla_n = max(a_xla, a_tier + CCL_KERNEL_ALPHA)
                 else:
                     scale_ar = bw.allreduce
                     scale_a2a = bw.alltoall
+            elif two_level:
+                tiers[n] = "intra"
             rank = lambda kind, scale=None: _rank_entries(
-                kind, bw, a_exp, a_xla, n, scale, eff_exp=effs[kind][0],
+                kind, bw, a_exp_n, a_xla_n, n, scale, eff_exp=effs[kind][0],
                 eff_xla=effs[kind][1], floor_xla=floor_xla)
             ar[n] = rank("all_reduce", scale_ar)
             a2a[n] = rank("all_to_all", scale_a2a)
@@ -260,13 +277,14 @@ class CommPlan:
                 "profile": profile.name, "n_endpoints": str(topo.n)}
         if two_level:
             meta["n_pods"] = str(topo.n_pods)
+            meta["fabric"] = f"{fabric.name}/{fabric.kind}"
         if calibration is not None:
             meta["source"] = "commplan+calibration"
             meta["calibration"] = (f"v{getattr(calibration, 'version', '?')}/"
                                    f"{getattr(calibration, 'system', '?')}/"
                                    f"n{getattr(calibration, 'n_endpoints', '?')}")
         return cls(ar, a2a, rs, ag, bucket_bytes=bucket, hierarchical=two_level,
-                   meta=meta)
+                   meta=meta, tiers=tiers)
 
     # -------------------------------------------------------------- lookups
     @staticmethod
@@ -289,14 +307,28 @@ class CommPlan:
             algo = fallback
         return algo
 
+    def distance_tier(self, axis_size: int) -> str:
+        """Fabric distance tier the plan ranked this axis size at: "intra"
+        inside the node/pod graph, else same_switch / same_group / diff_group.
+        Snaps to the nearest configured size like table lookups do."""
+        if not self.tiers:
+            return "intra"
+        if axis_size not in self.tiers:
+            axis_size = min(self.tiers, key=lambda n: abs(
+                math.log2(n) - math.log2(max(axis_size, 1))))
+        return self.tiers[axis_size]
+
     def all_reduce_algo(self, nbytes: int, axis_size: int, *, dcn: bool = False) -> str:
         if dcn and self.hierarchical:
             return "hierarchical"
         return self._algo("all_reduce", self.all_reduce_table, nbytes, axis_size, "ring")
 
     def all_to_all_algo(self, nbytes: int, axis_size: int) -> str:
-        # Obs. 7: beyond 512 endpoints *CCL alltoall is unstable — force pairwise.
-        if axis_size > 512:
+        # Obs. 7: beyond 512 endpoints *CCL alltoall is unstable — force
+        # pairwise.  Group boundaries count too: once the axis spans fabric
+        # groups, connection state rides the noisy global links, so the
+        # bounded-state schedule wins regardless of endpoint count.
+        if axis_size > 512 or self.distance_tier(axis_size) == "diff_group":
             return "pairwise"
         return self._algo("all_to_all", self.all_to_all_table, nbytes, axis_size, "pairwise")
 
@@ -356,6 +388,7 @@ class CommPlan:
             "all_gather": dump(self.all_gather_table),
             "bucket_bytes": self.bucket_bytes,
             "hierarchical": self.hierarchical,
+            "tiers": {str(n): t for n, t in self.tiers.items()},
         }
 
     @classmethod
@@ -371,6 +404,7 @@ class CommPlan:
             bucket_bytes=int(blob.get("bucket_bytes", DEFAULT_BUCKET_BYTES)),
             hierarchical=bool(blob.get("hierarchical", False)),
             meta=dict(blob.get("meta", {})),
+            tiers={int(n): str(t) for n, t in blob.get("tiers", {}).items()},
         )
 
     def save(self, path: str) -> None:

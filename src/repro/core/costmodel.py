@@ -30,7 +30,7 @@ import math
 from typing import Callable, Dict, Optional
 
 from . import hw
-from .topology import LinkGraph, TwoLevelTopology
+from .topology import Fabric, INTER_TIERS, LinkGraph, TwoLevelTopology
 
 LOG2 = lambda n: max(1, int(math.ceil(math.log2(max(n, 2)))))
 
@@ -91,15 +91,21 @@ class CommModel:
 
     def __init__(self, profile: hw.SystemProfile, node_graph: LinkGraph,
                  two_level: Optional[TwoLevelTopology] = None,
-                 calibration: Optional[object] = None):
+                 calibration: Optional[object] = None,
+                 fabric: Optional[Fabric] = None):
         self.profile = profile
         self.graph = node_graph
         self.two_level = two_level
+        self.fabric = fabric if fabric is not None else (
+            two_level.fabric if two_level is not None else None)
         self.calibration = calibration
         self._eff_pair = dict(MECH_EFFICIENCY)
+        self._eff_inter = dict(MECH_EFFICIENCY_P2P_INTER)
         self._eff_coll_ar = dict(MECH_EFFICIENCY_COLLECTIVE)
         self._eff_coll_a2a = dict(MECH_EFFICIENCY_COLLECTIVE)
         self._alpha_intra: Dict[str, float] = {}
+        self._alpha_inter: Dict[tuple, float] = {}      # (mech, tier) -> seconds
+        self._eff_inter_tier: Dict[tuple, float] = {}   # (mech, tier) -> fraction
         if calibration is not None:
             self._apply_calibration(calibration)
 
@@ -112,6 +118,21 @@ class CommModel:
             fa = cal.get(mech, "p2p", "small")
             if fa is not None and fa.alpha > 0:
                 self._alpha_intra[mech] = fa.alpha
+        # inter-node path: the measured p2p fit replaces the paper-derived
+        # MECH_EFFICIENCY_P2P_INTER fraction (previously the profile was
+        # silently ignored here), and tier-qualified fits (mech/p2p/*@tier,
+        # from an inter-tier sweep) refine it per distance class.
+        for mech in self._eff_inter:
+            eff = cal.efficiency(mech, "p2p", self.profile.nic_bw)
+            if eff is not None:
+                self._eff_inter[mech] = clamp(eff)
+            for tier in INTER_TIERS:
+                eff_t = cal.efficiency(mech, "p2p", self.profile.nic_bw, tier=tier)
+                if eff_t is not None:
+                    self._eff_inter_tier[(mech, tier)] = clamp(eff_t)
+                fa = cal.get(mech, "p2p", "small", tier=tier)
+                if fa is not None and fa.alpha > 0:
+                    self._alpha_inter[(mech, tier)] = fa.alpha
         ar_bound = self.graph.allreduce_expected_goodput()
         a2a_bound = self.graph.alltoall_expected_goodput()
         for mech in MECH_EFFICIENCY_COLLECTIVE:
@@ -123,9 +144,24 @@ class CommModel:
                 self._eff_coll_a2a[mech] = clamp(a2a)
 
     # ----- mechanism plumbing ------------------------------------------------
-    def _alpha(self, mechanism: str, inter_node: bool, distance: str = "same_switch") -> float:
+    def _tier_for(self, n_endpoints: int) -> str:
+        """Distance tier an n-endpoint job spans, from the fabric (falls back
+        to the conservative diff_group when no fabric is attached)."""
+        if self.fabric is not None:
+            tier = self.fabric.tier_for_scale(n_endpoints)
+            return "same_switch" if tier == "same_node" else tier
+        return "diff_group"
+
+    def _alpha(self, mechanism: str, inter_node: bool,
+               distance: Optional[str] = "same_switch") -> float:
         p = self.profile
         if inter_node:
+            if distance is None:
+                distance = "diff_group"
+            if (mechanism, distance) in self._alpha_inter:
+                # measured end-to-end: the fit already pays kernel-launch /
+                # staging overheads, so no adders on top
+                return self._alpha_inter[(mechanism, distance)]
             base = {
                 "same_switch": p.inter_latency_same_switch,
                 "same_group": p.inter_latency_same_group,
@@ -141,23 +177,43 @@ class CommModel:
         lat = p.intra_latency
         return getattr(lat, mechanism)
 
-    def _bw(self, mechanism: str, inter_node: bool) -> float:
+    def _inter_nic_bw(self, distance: str) -> float:
+        """Per-endpoint inter-node bandwidth at a distance tier: the NIC,
+        capped by the fabric tier bound (fat-tree taper, dragonfly global
+        links)."""
+        if self.fabric is not None:
+            return min(self.profile.nic_bw, self.fabric.tier_bw(distance))
+        return self.profile.nic_bw
+
+    def _bw(self, mechanism: str, inter_node: bool,
+            distance: Optional[str] = None) -> float:
         p = self.profile
         if mechanism == "staging":
             return p.host_staging_bw * MECH_EFFICIENCY["staging"]
         if inter_node:
-            return p.nic_bw * MECH_EFFICIENCY_P2P_INTER[mechanism]
+            tier = distance or "diff_group"
+            eff = self._eff_inter_tier.get((mechanism, tier),
+                                           self._eff_inter[mechanism])
+            return self._inter_nic_bw(tier) * eff
         return p.pair_bw * self._eff_pair[mechanism]
 
     # ----- point-to-point (Figs. 3, 7, 8) ------------------------------------
     def p2p(self, s: float, mechanism: str = "mpi", inter_node: bool = False,
-            distance: str = "same_switch") -> CollectiveCost:
+            distance: str = "same_switch",
+            endpoints: Optional[tuple] = None) -> CollectiveCost:
+        """Point-to-point cost.  `distance` names the tier explicitly; passing
+        an `endpoints` pair instead classifies it on the attached fabric."""
+        if endpoints is not None and self.fabric is not None:
+            tier = self.fabric.distance(*endpoints)
+            inter_node = tier != "same_node"
+            distance = "same_switch" if tier == "same_node" else tier
         a = self._alpha(mechanism, inter_node, distance)
         if mechanism == "staging":
             # store-and-forward: dev->host, host->host (or NIC), host->dev
-            t = a + s / (self.profile.host_staging_bw * 0.9) * 2 + s / self._bw("mpi", inter_node)
+            t = a + s / (self.profile.host_staging_bw * 0.9) * 2 \
+                + s / self._bw("mpi", inter_node, distance)
             return CollectiveCost(t, 3 * s)
-        t = a + s / self._bw(mechanism, inter_node)
+        t = a + s / self._bw(mechanism, inter_node, distance)
         return CollectiveCost(t, s)
 
     # ----- intra-node collectives (Figs. 5, 6) --------------------------------
@@ -205,12 +261,13 @@ class CommModel:
         goodput; the intra-node fraction (n_node-1)/(n-1) is served at intra speed."""
         p = self.profile
         nn = p.endpoints_per_node
-        a = self._alpha(mechanism, True, "diff_group")
+        tier = self._tier_for(n_endpoints)
+        a = self._alpha(mechanism, True, tier)
         eff = self._eff_coll_a2a.get(mechanism, 0.5)
         if n_endpoints <= nn:
             return self.alltoall_intra(s_total, mechanism, n_endpoints)
         frac_inter = (n_endpoints - nn) / (n_endpoints - 1)
-        bw_inter = p.nic_bw * eff * (1.0 - noise)
+        bw_inter = self._inter_nic_bw(tier) * eff * (1.0 - noise)
         bw_intra = self.graph.alltoall_expected_goodput() * eff
         t = (n_endpoints - 1) * a / 50.0  # pipelined connection setup, amortized
         t += s_total * frac_inter / bw_inter + s_total * (1 - frac_inter) / bw_intra
@@ -226,11 +283,15 @@ class CommModel:
         if n_endpoints <= nn:
             return self.allreduce_intra(s, mechanism)
         eff = self._eff_coll_ar.get(mechanism, 0.5)
-        a = self._alpha(mechanism, True, "diff_group")
-        # hierarchical: intra reduce-scatter, inter ring over n_nodes, intra allgather
-        n_nodes = n_endpoints // nn
+        tier = self._tier_for(n_endpoints)
+        a = self._alpha(mechanism, True, tier)
+        # hierarchical: intra reduce-scatter, inter ring over n_nodes, intra
+        # allgather.  Nodes are counted with ceil division: 12 endpoints on
+        # 8-GPU nodes span 2 nodes, so the inter phase exists (floor made it
+        # vanish for any non-multiple endpoint count).
+        n_nodes = -(-n_endpoints // nn)
         intra = self.allreduce_intra(s, mechanism).seconds
-        bw_inter = p.nic_bw * eff * (1.0 - noise)
+        bw_inter = self._inter_nic_bw(tier) * eff * (1.0 - noise)
         inter = 2 * (n_nodes - 1) * a / 10.0 + 2.0 * (s / nn) * (n_nodes - 1) / n_nodes / bw_inter
         if mechanism == "mpi" and self.profile.name == "leonardo":
             # Open MPI v4 runs the reduction on the host (Sec. IV-D)
@@ -239,13 +300,16 @@ class CommModel:
 
 
 def make_comm_model(system: str = "tpu_v5e", calibration: Optional[object] = None) -> CommModel:
-    from .topology import make_paper_node_graphs, make_tpu_pod, make_tpu_multipod
+    from .topology import (make_paper_fabrics, make_paper_node_graphs,
+                           make_tpu_pod, make_tpu_multipod)
 
     prof = hw.SYSTEMS[system]
     if system == "tpu_v5e":
         return CommModel(prof, make_tpu_pod(), make_tpu_multipod(),
-                         calibration=calibration)
-    return CommModel(prof, make_paper_node_graphs()[system], calibration=calibration)
+                         calibration=calibration,
+                         fabric=make_paper_fabrics()[system])
+    return CommModel(prof, make_paper_node_graphs()[system], calibration=calibration,
+                     fabric=make_paper_fabrics()[system])
 
 
 def crossover_bytes(model: CommModel, n: int, mech_a: str = "ccl", mech_b: str = "mpi",

@@ -1,0 +1,169 @@
+"""At-scale scenario suite: the paper's Sec. V-VI sweeps as assertable curves.
+
+The headline results of the paper are *inter-node*: allreduce/alltoall behavior
+from 8 to 4096 GPUs on Slingshot dragonfly (Alps, LUMI), a tapered fat-tree
+(Leonardo), and — for this repo's deployment target — the TPU multipod DCN.
+This module drives `CommModel` + the `Fabric` layer over that grid and returns
+structured points that tests (and `benchmarks.run at_scale`) can assert
+qualitative paper shapes on:
+
+  * alltoall weak-scaling goodput per endpoint decays monotonically toward the
+    fabric's asymptotic per-endpoint bound (Sec. V-C / Fig. 9);
+  * allreduce is hierarchical min-of-phases: goodput never exceeds the
+    intra-node bound and flattens at the fabric phase (Sec. V-A / Fig. 10);
+  * network noise costs allreduce ~2x more than alltoall at 1k+ endpoints
+    (Sec. VI / Obs. 8), applied to the inter-tier traffic fraction only;
+  * the untapped-bandwidth gap: achieved goodput vs the fabric bound.
+
+Everything here is model-driven (closed-form alpha-beta over the fabric), so
+sweeping to 4096 endpoints costs microseconds per point and runs in CI.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from .costmodel import CommModel, make_comm_model
+from .noise import NoiseModel
+from .topology import TwoLevelTopology, make_paper_systems
+
+DEFAULT_ENDPOINTS = (8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096)
+PAPER_SYSTEMS = ("alps", "leonardo", "lumi", "tpu_v5e")
+DEFAULT_BYTES = 4 << 20  # per-endpoint buffer, the paper's large-message regime
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioPoint:
+    """One (system, collective, scale) evaluation of the at-scale model."""
+
+    system: str
+    collective: str            # "allreduce" | "alltoall"
+    scaling: str               # "weak" | "strong"
+    mechanism: str
+    n_endpoints: int
+    payload_bytes: float       # per-endpoint bytes at this scale
+    seconds: float
+    goodput_bytes_s: float     # payload / seconds (paper Sec. IV-A definition)
+    tier: str                  # fabric distance tier spanned at this scale
+    bound_bytes_s: float       # topology expected-goodput bound at this scale
+    noisy_goodput_bytes_s: float  # goodput under the system's noise model
+
+
+def system_noise(system: str) -> NoiseModel:
+    """Noise model per paper system, built from the profile's Sec. VI numbers."""
+    if system == "leonardo":
+        return NoiseModel.leonardo_diff_group()
+    if system == "tpu_v5e":
+        return NoiseModel.tpu_dcn()
+    return NoiseModel.isolated()  # Alps/LUMI: ~1% production noise (Obs. 6)
+
+
+def sweep_collective(system: str, collective: str = "alltoall",
+                     scaling: str = "weak", mechanism: str = "ccl",
+                     endpoints: Sequence[int] = DEFAULT_ENDPOINTS,
+                     bytes_per_endpoint: int = DEFAULT_BYTES,
+                     model: Optional[CommModel] = None,
+                     topo: Optional[TwoLevelTopology] = None,
+                     noise: Optional[NoiseModel] = None) -> List[ScenarioPoint]:
+    """One scaling curve: goodput per endpoint vs endpoint count.
+
+    Weak scaling keeps the per-endpoint buffer fixed (the paper's setup);
+    strong scaling keeps the *global* bytes fixed at
+    `bytes_per_endpoint * endpoints[0]`, so per-endpoint payload shrinks and
+    the latency terms surface at scale.
+    """
+    model = model or make_comm_model(system)
+    topo = topo or make_paper_systems()[system]
+    noise = noise or system_noise(system)
+    nn = model.profile.endpoints_per_node
+    total = float(bytes_per_endpoint) * endpoints[0]
+    # topology bounds are pure functions of n: evaluate once per scale
+    points: List[ScenarioPoint] = []
+    for n in endpoints:
+        s = float(bytes_per_endpoint) if scaling == "weak" else total / n
+        if collective == "alltoall":
+            cost = model.alltoall_at_scale(s, n, mechanism)
+            bound = topo.alltoall_expected_goodput(n)
+        elif collective == "allreduce":
+            cost = model.allreduce_at_scale(s, n, mechanism)
+            bound = topo.allreduce_expected_goodput(n)
+        else:
+            raise ValueError(collective)
+        goodput = cost.goodput(s)
+        tier = topo.tier_for_scale(n)
+        noisy = goodput * noise.goodput_scaling(n, nn, collective)
+        points.append(ScenarioPoint(system, collective, scaling, mechanism, n,
+                                    s, cost.seconds, goodput, tier, bound, noisy))
+    return points
+
+
+def at_scale_suite(systems: Sequence[str] = PAPER_SYSTEMS,
+                   endpoints: Sequence[int] = DEFAULT_ENDPOINTS,
+                   bytes_per_endpoint: int = DEFAULT_BYTES,
+                   mechanisms: Sequence[str] = ("ccl", "mpi"),
+                   ) -> List[ScenarioPoint]:
+    """The full paper grid: {system} x {allreduce, alltoall} x {weak, strong}
+    x {mechanism} over the endpoint sweep."""
+    topos = make_paper_systems()
+    points: List[ScenarioPoint] = []
+    for system in systems:
+        model = make_comm_model(system)
+        noise = system_noise(system)
+        for collective in ("alltoall", "allreduce"):
+            for scaling in ("weak", "strong"):
+                for mech in mechanisms:
+                    points.extend(sweep_collective(
+                        system, collective, scaling, mech, endpoints,
+                        bytes_per_endpoint, model=model, topo=topos[system],
+                        noise=noise))
+    return points
+
+
+# ------------------------------------------------------- curve-shape oracles
+def asymptote(system: str, topo: Optional[TwoLevelTopology] = None) -> float:
+    """The per-endpoint bound an at-scale alltoall approaches (Sec. V-C)."""
+    topo = topo or make_paper_systems()[system]
+    return topo.alltoall_asymptotic_goodput()
+
+
+def is_monotone_non_increasing(points: Sequence[ScenarioPoint],
+                               rel_tol: float = 1e-6) -> bool:
+    """Weak-scaling goodput must never rise with endpoint count."""
+    gs = [p.goodput_bytes_s for p in points]
+    return all(b <= a * (1 + rel_tol) for a, b in zip(gs, gs[1:]))
+
+
+def check_paper_shapes(system: str,
+                       endpoints: Sequence[int] = DEFAULT_ENDPOINTS,
+                       bytes_per_endpoint: int = DEFAULT_BYTES) -> Dict[str, bool]:
+    """Sec. V/VI qualitative observations as named booleans — the scenario
+    suite's self-check, asserted by tests and the at_scale benchmark section."""
+    topo = make_paper_systems()[system]
+    model = make_comm_model(system)
+    noise = system_noise(system)
+    a2a = sweep_collective(system, "alltoall", "weak", "ccl", endpoints,
+                           bytes_per_endpoint, model=model, topo=topo, noise=noise)
+    ar = sweep_collective(system, "allreduce", "weak", "ccl", endpoints,
+                          bytes_per_endpoint, model=model, topo=topo, noise=noise)
+    asym = asymptote(system, topo)
+    last = a2a[-1]
+    intra_ar = topo.intra.allreduce_expected_goodput()
+    nn = model.profile.endpoints_per_node
+    n_big = endpoints[-1]
+    return {
+        # alltoall goodput decays toward (and never beats) the fabric bound
+        "alltoall_monotone": is_monotone_non_increasing(a2a),
+        "alltoall_bounded": all(p.goodput_bytes_s <= p.bound_bytes_s * 1.001
+                                for p in a2a if p.n_endpoints > nn),
+        "alltoall_approaches_asymptote": 0.0 < last.goodput_bytes_s <= asym
+                                         and last.bound_bytes_s <= asym * 1.2,
+        # allreduce is min-of-phases: never above the intra-node bound
+        "allreduce_hierarchical_min": all(
+            p.goodput_bytes_s <= intra_ar * 1.001 for p in ar),
+        # Obs. 8: noise costs allreduce more than alltoall at scale
+        "noise_hits_allreduce_harder":
+            noise.goodput_scaling(n_big, nn, "allreduce")
+            <= noise.goodput_scaling(n_big, nn, "alltoall"),
+        # untapped bandwidth: the achieved curve sits below the fabric bound
+        "untapped_bandwidth_gap": last.goodput_bytes_s < last.bound_bytes_s,
+    }

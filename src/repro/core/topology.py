@@ -13,13 +13,19 @@ We implement:
       alltoall  <= aggregate injection bandwidth / EFI          (Sec. IV-A)
       allreduce <= sum of outgoing links (fully connected, pipelined trees)
                    or n_disjoint_rings * link_bw / 2 (Rabenseifner)  (Sec. IV-C)
+  * the inter-node `Fabric` layer (Secs. V-VI): dragonfly (Slingshot groups +
+    global links), fat-tree (Leonardo's 2:1 taper), and rail-optimized shapes,
+    each classifying endpoint pairs into distance tiers (same_switch /
+    same_group / diff_group) and bounding per-tier goodput by reusing the
+    LinkGraph machinery one level up (switch graphs, group graphs).
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import math
 from collections import defaultdict, deque
-from typing import Dict, Iterable, List, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 Edge = Tuple[int, int]
 
@@ -30,12 +36,19 @@ def _key(u: int, v: int) -> Edge:
 
 @dataclasses.dataclass
 class LinkGraph:
-    """Undirected multigraph: edge (u,v) -> number of physical links."""
+    """Undirected multigraph: edge (u,v) -> number of physical links.
+
+    Treated as immutable after construction: routing helpers cache an
+    adjacency list on first use (mutating `links` afterwards is undefined).
+    `dims` records the grid shape for torus constructors so bisection can
+    take the minimum over axis-aligned cuts.
+    """
 
     n: int
     links: Dict[Edge, int]
     link_bw: float  # bytes/s per physical link, unidirectional
     name: str = "graph"
+    dims: Optional[Tuple[int, ...]] = None
 
     # -- constructors -------------------------------------------------------
     @staticmethod
@@ -57,7 +70,7 @@ class LinkGraph:
     @staticmethod
     def ring(n: int, link_bw: float, links_per_edge: int = 1, name: str = "ring") -> "LinkGraph":
         links = {_key(i, (i + 1) % n): links_per_edge for i in range(n)}
-        return LinkGraph(n, links, link_bw, name)
+        return LinkGraph(n, links, link_bw, name, dims=(n,))
 
     @staticmethod
     def torus2d(nx: int, ny: int, link_bw: float, name: str = "torus2d") -> "LinkGraph":
@@ -68,7 +81,7 @@ class LinkGraph:
             for y in range(ny):
                 links[_key(idx(x, y), idx((x + 1) % nx, y))] += 1
                 links[_key(idx(x, y), idx(x, (y + 1) % ny))] += 1
-        return LinkGraph(nx * ny, dict(links), link_bw, name)
+        return LinkGraph(nx * ny, dict(links), link_bw, name, dims=(nx, ny))
 
     @staticmethod
     def torus3d(nx: int, ny: int, nz: int, link_bw: float, name: str = "torus3d") -> "LinkGraph":
@@ -80,21 +93,33 @@ class LinkGraph:
                     links[_key(idx(x, y, z), idx((x + 1) % nx, y, z))] += 1
                     links[_key(idx(x, y, z), idx(x, (y + 1) % ny, z))] += 1
                     links[_key(idx(x, y, z), idx(x, y, (z + 1) % nz))] += 1
-        return LinkGraph(nx * ny * nz, dict(links), link_bw, name)
+        return LinkGraph(nx * ny * nz, dict(links), link_bw, name, dims=(nx, ny, nz))
 
     # -- basic properties ----------------------------------------------------
+    def _adjacency(self) -> Dict[int, List[Tuple[int, int]]]:
+        """u -> sorted [(neighbor, link_count)], built once and cached.
+
+        The graph is treated as immutable after construction, so the cache is
+        never invalidated.  Without it every `neighbors` call rescans the whole
+        edge dict, making the BFS-heavy EFI/ECMP paths quadratic in edges —
+        intractable for 4096-endpoint fabrics."""
+        adj = self.__dict__.get("_adj_cache")
+        if adj is None:
+            tmp: Dict[int, List[Tuple[int, int]]] = defaultdict(list)
+            for (a, b), c in self.links.items():
+                tmp[a].append((b, c))
+                if a != b:
+                    tmp[b].append((a, c))
+            adj = {u: sorted(nbrs) for u, nbrs in tmp.items()}
+            self.__dict__["_adj_cache"] = adj
+        return adj
+
     def neighbors(self, u: int) -> List[int]:
-        out = []
-        for (a, b) in self.links:
-            if a == u:
-                out.append(b)
-            elif b == u:
-                out.append(a)
-        return sorted(out)
+        return [v for v, _ in self._adjacency().get(u, [])]
 
     def degree_links(self, u: int) -> int:
         """Number of physical links incident to u (simultaneously usable)."""
-        return sum(c for (a, b), c in self.links.items() if a == u or b == u)
+        return sum(c for _, c in self._adjacency().get(u, []))
 
     def injection_bw(self, u: int) -> float:
         return self.degree_links(u) * self.link_bw
@@ -104,8 +129,9 @@ class LinkGraph:
 
     def pair_bw(self, u: int, v: int) -> float:
         """Nominal single-best-path bandwidth between u,v (paper Fig. 4 dashed lines):
-        the max over paths of the bottleneck capacity, not summed across paths."""
-        # max-bottleneck path via binary search over capacities
+        the max over paths of the bottleneck capacity, not summed across paths.
+        Implemented as a linear scan over the distinct link-bundle capacities,
+        keeping the largest one that still connects u to v."""
         caps = sorted({c for c in self.links.values()})
         best = 0
         for cap in caps:
@@ -114,19 +140,16 @@ class LinkGraph:
         return best * self.link_bw
 
     def _connected_with_min_cap(self, u: int, v: int, cap: int) -> bool:
+        adj = self._adjacency()
         seen = {u}
         q = deque([u])
         while q:
             x = q.popleft()
             if x == v:
                 return True
-            for (a, b), c in self.links.items():
-                if c < cap:
-                    continue
-                if a == x and b not in seen:
-                    seen.add(b); q.append(b)
-                elif b == x and a not in seen:
-                    seen.add(a); q.append(a)
+            for y, c in adj.get(x, []):
+                if c >= cap and y not in seen:
+                    seen.add(y); q.append(y)
         return v in seen
 
     # -- routing / EFI -------------------------------------------------------
@@ -214,14 +237,26 @@ class LinkGraph:
             norm = list(loads.values())
         return max(norm) if norm else 0.0
 
+    def _memo(self, key, compute):
+        """Result cache for the routing-heavy bounds (the graph is immutable,
+        see the class docstring) — the all-pairs ECMP enumeration behind them
+        is seconds on a 256-node torus, and the at-scale sweeps would
+        otherwise pay it per evaluated endpoint count."""
+        cache = self.__dict__.setdefault("_bound_cache", {})
+        if key not in cache:
+            cache[key] = compute()
+        return cache[key]
+
     def bottleneck_pair_goodput(self, routing: str = "ecmp") -> float:
         """Max per-pair goodput g (bytes/s) sustainable by *all* pairs concurrently:
         for every directed edge e, g * paths(e) <= links(e) * link_bw.
         LUMI: min(400 Gb/s / 4) = 100 Gb/s per GCD pair (paper Sec. IV-A)."""
-        loads = self.edge_loads_single_path() if routing == "single" else self.edge_loads_ecmp()
-        return min(
-            self.links[_key(a, b)] * self.link_bw / load for (a, b), load in loads.items()
-        )
+        def compute():
+            loads = (self.edge_loads_single_path() if routing == "single"
+                     else self.edge_loads_ecmp())
+            return min(self.links[_key(a, b)] * self.link_bw / load
+                       for (a, b), load in loads.items())
+        return self._memo(("bottleneck", routing), compute)
 
     # -- expected goodput (paper Secs. IV-A / IV-C) ---------------------------
     def alltoall_expected_goodput(self, routing: str = "ecmp", forwarding: bool | None = None) -> float:
@@ -236,16 +271,19 @@ class LinkGraph:
         torus (forwarding=True) intermediate chips forward, so all n-1 flows run
         concurrently and the bound coincides with the bisection bound
         (16x16 v5e torus: ~25 GB/s per chip)."""
-        if self._is_fully_connected():
-            return min(self.degree_links(u) for u in range(self.n)) * self.link_bw
-        if forwarding is None:
-            forwarding = self.name.startswith(("torus", "v5e", "ring"))
-        g = self.bottleneck_pair_goodput(routing)
-        inj = min(self.degree_links(u) for u in range(self.n)) * self.link_bw
-        flows = self.n - 1 if forwarding else min(
-            min(self.degree_links(u) for u in range(self.n)), self.n - 1
-        )
-        return min(inj, flows * g)
+        def compute():
+            if self._is_fully_connected():
+                return min(self.degree_links(u) for u in range(self.n)) * self.link_bw
+            fwd = forwarding
+            if fwd is None:
+                fwd = self.name.startswith(("torus", "v5e", "ring"))
+            g = self.bottleneck_pair_goodput(routing)
+            inj = min(self.degree_links(u) for u in range(self.n)) * self.link_bw
+            flows = self.n - 1 if fwd else min(
+                min(self.degree_links(u) for u in range(self.n)), self.n - 1
+            )
+            return min(inj, flows * g)
+        return self._memo(("alltoall", routing, forwarding), compute)
 
     def count_edge_disjoint_rings(self) -> int:
         """Number of edge-disjoint Hamiltonian-ring link sets, lower-bounded by
@@ -268,22 +306,46 @@ class LinkGraph:
             link bandwidth;
           - otherwise: ring Rabenseifner over edge-disjoint bidirectional rings,
             sending 2x the buffer => rings * link_bw / 2."""
-        if self._is_fully_connected():
-            return min(self.degree_links(u) for u in range(self.n)) * self.link_bw
-        rings = self.count_edge_disjoint_rings()
-        # Rabenseifner moves 2S bytes through each ring link => goodput = rings*bw/2.
-        # LUMI: 4 rings x 400 Gb/s / 2 = 800 Gb/s (paper Sec. IV-C).
-        return rings * self.link_bw / 2.0
+        def compute():
+            if self._is_fully_connected():
+                return min(self.degree_links(u) for u in range(self.n)) * self.link_bw
+            rings = self.count_edge_disjoint_rings()
+            # Rabenseifner moves 2S bytes through each ring link => goodput =
+            # rings*bw/2.  LUMI: 4 rings x 400 Gb/s / 2 = 800 Gb/s (Sec. IV-C).
+            return rings * self.link_bw / 2.0
+        return self._memo(("allreduce",), compute)
 
     def _is_fully_connected(self) -> bool:
-        return all(self.pair_links(u, v) > 0 for u, v in itertools.combinations(range(self.n), 2))
+        return self._memo(("fc",), lambda: all(
+            self.pair_links(u, v) > 0
+            for u, v in itertools.combinations(range(self.n), 2)))
 
     def bisection_bw(self) -> float:
-        """Approximate bisection bandwidth: min over axis-aligned cuts for tori,
-        else half-split cut."""
+        """Approximate bisection bandwidth: minimum over axis-aligned half cuts
+        when the grid shape is known (tori/rings record `dims`), else the
+        contiguous index half-split.  The axis minimum matters for asymmetric
+        and odd-dimension tori, where the index half-split is not the narrowest
+        cut (e.g. a 2x8 torus is y-axis-limited: 4 links, not 16)."""
+        if self.dims and len(self.dims) >= 1 and any(d >= 2 for d in self.dims):
+            return min(self._axis_cut_links(ax) for ax, d in enumerate(self.dims)
+                       if d >= 2) * self.link_bw
         half = self.n // 2
         cut = sum(c for (a, b), c in self.links.items() if (a < half) != (b < half))
         return cut * self.link_bw
+
+    def _coords(self, node: int) -> Tuple[int, ...]:
+        cs = []
+        for d in reversed(self.dims):
+            cs.append(node % d)
+            node //= d
+        return tuple(reversed(cs))
+
+    def _axis_cut_links(self, axis: int) -> int:
+        """Links crossing the half cut perpendicular to `axis` (coord < d//2
+        vs the rest); wraparound edges cross once more at the seam."""
+        half = self.dims[axis] // 2
+        return sum(c for (a, b), c in self.links.items()
+                   if (self._coords(a)[axis] < half) != (self._coords(b)[axis] < half))
 
 
 # Edge-disjoint bidirectional ring counts for known graphs (paper Sec. IV-C cites 4
@@ -291,42 +353,338 @@ class LinkGraph:
 KNOWN_RINGS = {"lumi_node": 4}
 
 
+# Distance tiers of the inter-node fabric (paper Secs. V-VI: latency and noise
+# are classified per pair as same switch / same group / different group).
+INTER_TIERS = ("same_switch", "same_group", "diff_group")
+TIERS = ("same_node",) + INTER_TIERS
+
+
+@dataclasses.dataclass(frozen=True)
+class Fabric:
+    """Inter-node network fabric: endpoints -> nodes -> switches -> groups.
+
+    Models the paper's three fabric shapes (Sec. II / Table I) above the
+    intra-node `LinkGraph`:
+
+      * ``dragonfly``  — Slingshot-style: switches within a group are fully
+        connected (``switch_graph``), groups are fully connected over global
+        links (``group_graph``); both tiers get EFI-style expected-goodput
+        bounds by reusing the `LinkGraph` machinery.
+      * ``fat_tree``   — Leonardo-style leaf/spine/core with a ``taper``
+        (2:1 on Leonardo): full NIC bandwidth up to the group (pod) spine,
+        1/taper of it through the core.
+      * ``rail``       — rail-optimized: endpoint i of every node attaches to
+        rail-switch i, so same-rail pairs are one switch hop away and
+        cross-rail traffic pays the spine.
+      * ``flat``       — backward-compatible scalar-DCN stand-in: every node
+        is its own group, all inter traffic is `diff_group` at ``nic_bw``
+        (exactly the old ``TwoLevelTopology.dcn_bw`` behavior).
+
+    Endpoints are packed: node = ep // endpoints_per_node, switch =
+    node // nodes_per_switch, group = switch // switches_per_group.
+    """
+
+    name: str
+    kind: str                      # "dragonfly" | "fat_tree" | "rail" | "flat"
+    endpoints_per_node: int
+    nodes_per_switch: int
+    switches_per_group: int
+    n_groups: int
+    nic_bw: float                  # per-endpoint injection, bytes/s
+    link_bw: float = 0.0           # per fabric link (defaults to nic_bw)
+    taper: float = 1.0             # leaf->core oversubscription (fat_tree/rail)
+    switch_graph: Optional[LinkGraph] = None   # switches within one group
+    group_graph: Optional[LinkGraph] = None    # groups over global links
+
+    # ------------------------------------------------------------- geometry
+    @property
+    def nodes_per_group(self) -> int:
+        return self.nodes_per_switch * self.switches_per_group
+
+    @property
+    def n_nodes(self) -> int:
+        return self.nodes_per_group * self.n_groups
+
+    @property
+    def endpoints_per_switch(self) -> int:
+        return self.nodes_per_switch * self.endpoints_per_node
+
+    @property
+    def endpoints_per_group(self) -> int:
+        return self.nodes_per_group * self.endpoints_per_node
+
+    @property
+    def n_endpoints(self) -> int:
+        return self.n_nodes * self.endpoints_per_node
+
+    def node_of(self, endpoint: int) -> int:
+        return endpoint // self.endpoints_per_node
+
+    def switch_of(self, node: int) -> int:
+        return node // self.nodes_per_switch
+
+    def group_of(self, node: int) -> int:
+        return self.switch_of(node) // self.switches_per_group
+
+    # ------------------------------------------------- distance classification
+    def distance(self, ep_a: int, ep_b: int) -> str:
+        """Distance tier of an endpoint pair (paper Sec. V-B / Fig. 7)."""
+        na, nb = self.node_of(ep_a), self.node_of(ep_b)
+        if na == nb:
+            return "same_node"
+        if self.kind == "rail":
+            # rail-optimized: same local index => one hop through the rail
+            # switch; cross-rail traffic goes through the spine.
+            same_rail = (ep_a % self.endpoints_per_node) == (ep_b % self.endpoints_per_node)
+            return "same_switch" if same_rail else "same_group"
+        if self.switch_of(na) == self.switch_of(nb):
+            return "same_switch"
+        if self.group_of(na) == self.group_of(nb):
+            return "same_group"
+        return "diff_group"
+
+    def tier_for_scale(self, n_endpoints: int) -> str:
+        """Widest tier spanned by a compact job of `n_endpoints` (endpoints
+        [0, n) under packed placement) — the tier whose bounds govern an
+        at-scale collective on that many endpoints."""
+        if n_endpoints <= self.endpoints_per_node:
+            return "same_node"
+        if self.kind == "rail":
+            return "same_group" if self.endpoints_per_node > 1 else "same_switch"
+        if n_endpoints <= self.endpoints_per_switch:
+            return "same_switch"
+        if n_endpoints <= self.endpoints_per_group:
+            return "same_group"
+        return "diff_group"
+
+    # ------------------------------------------------------- per-tier bounds
+    def tier_bw(self, tier: str) -> float:
+        """Per-endpoint expected-goodput bound (bytes/s) when traffic spans
+        `tier` — the EFI-style bound of Sec. IV-A lifted one level up: the
+        tier's link graph bounds the aggregate, divided by the endpoints
+        sharing it, capped by the NIC.  Tiers are monotone: wider never beats
+        narrower."""
+        if tier == "same_node":
+            return float("inf")  # governed by the intra-node graph, not the fabric
+        if tier == "same_switch":
+            return self.nic_bw
+        if tier == "same_group":
+            if self.kind == "dragonfly" and self.switch_graph is not None:
+                agg = self.switch_graph.alltoall_expected_goodput()  # per switch
+                return min(self.nic_bw, agg / max(self.endpoints_per_switch, 1))
+            if self.kind == "rail":
+                return self.nic_bw / max(self.taper, 1.0)
+            return self.nic_bw  # fat-tree pod spine / flat: non-blocking
+        if tier == "diff_group":
+            same_group = self.tier_bw("same_group")
+            if self.kind == "dragonfly" and self.group_graph is not None:
+                agg = self.group_graph.alltoall_expected_goodput()  # per group
+                return min(same_group, agg / max(self.endpoints_per_group, 1))
+            if self.kind == "fat_tree":
+                return min(same_group, self.nic_bw / max(self.taper, 1.0))
+            return same_group
+        raise ValueError(f"unknown tier {tier!r}")
+
+    def tier_link_counts(self) -> Dict[str, int]:
+        """Physical link counts per tier: switch downlinks (same_switch), the
+        intra-group switch fabric (same_group, per group), and the global /
+        core links (diff_group, whole fabric)."""
+        counts = {"same_switch": self.endpoints_per_switch}
+        if self.kind == "dragonfly":
+            counts["same_group"] = (sum(self.switch_graph.links.values())
+                                    if self.switch_graph is not None else 0)
+            counts["diff_group"] = (sum(self.group_graph.links.values())
+                                    if self.group_graph is not None else 0)
+        elif self.kind == "fat_tree":
+            # taper sits at the group->core boundary (matching tier_bw): the
+            # pod spine is non-blocking, the core carries 1/taper of the
+            # aggregate injection
+            counts["same_group"] = self.endpoints_per_switch * self.switches_per_group
+            counts["diff_group"] = max(
+                int(round(self.endpoints_per_group * self.n_groups
+                          / max(self.taper, 1.0))), 1) if self.n_groups > 1 else 0
+        elif self.kind == "rail":
+            counts["same_group"] = max(
+                int(round(self.n_nodes * self.endpoints_per_node / max(self.taper, 1.0))), 1)
+            counts["diff_group"] = 0
+        else:  # flat
+            counts["same_group"] = 0
+            counts["diff_group"] = self.n_nodes
+        return counts
+
+    def bisection_bw(self) -> float:
+        """Fabric bisection (bytes/s): the narrowest tier's cut over half the
+        endpoints; dragonfly reuses the group/switch `LinkGraph` bisection."""
+        if self.kind == "dragonfly":
+            if self.n_groups > 1 and self.group_graph is not None:
+                return self.group_graph.bisection_bw()
+            if self.switch_graph is not None:
+                return self.switch_graph.bisection_bw()
+            return self.n_endpoints / 2.0 * self.nic_bw
+        widest = "diff_group" if self.n_groups > 1 else "same_group"
+        return self.n_endpoints / 2.0 * self.tier_bw(widest)
+
+    def asymptotic_alltoall_goodput(self) -> float:
+        """Sec. V-C: the per-endpoint goodput an at-scale alltoall approaches —
+        the widest populated tier's bound."""
+        if self.n_groups > 1:
+            return self.tier_bw("diff_group")
+        if self.switches_per_group > 1 or self.kind == "rail":
+            return self.tier_bw("same_group")
+        return self.tier_bw("same_switch")
+
+    def alltoall_expected_goodput(self, n_endpoints: int) -> float:
+        """Per-endpoint alltoall bound for a compact job of `n_endpoints`."""
+        return self.tier_bw(self.tier_for_scale(max(n_endpoints, 1)))
+
+    # ---------------------------------------------------------- constructors
+    @staticmethod
+    def dragonfly(name: str, endpoints_per_node: int, nic_bw: float,
+                  nodes_per_switch: int = 16, switches_per_group: int = 16,
+                  n_groups: int = 8, link_bw: Optional[float] = None,
+                  group_links_per_pair: Optional[int] = None,
+                  global_links_per_pair: Optional[int] = None) -> "Fabric":
+        """Slingshot-style dragonfly: all-to-all switches inside a group,
+        all-to-all groups over global links (paper Sec. II: Alps/LUMI).
+
+        Link bundles default to injection-balanced sizing (Slingshot's design
+        point, and why the paper's at-scale alltoall approaches the NIC
+        bandwidth): enough links per switch/group pair to carry the attached
+        endpoints' full injection.  Pass explicit counts to model a tapered
+        dragonfly."""
+        link_bw = nic_bw if link_bw is None else link_bw
+        eps_switch = nodes_per_switch * endpoints_per_node
+        eps_group = eps_switch * switches_per_group
+        inj = lambda eps, peers: max(
+            int(math.ceil(eps * nic_bw / (peers * link_bw))), 1)
+        switch_graph = group_graph = None
+        if switches_per_group > 1:
+            glp = (group_links_per_pair if group_links_per_pair is not None
+                   else inj(eps_switch, switches_per_group - 1))
+            switch_graph = LinkGraph.fully_connected(
+                switches_per_group, glp, link_bw, f"{name}_group")
+        if n_groups > 1:
+            glb = (global_links_per_pair if global_links_per_pair is not None
+                   else inj(eps_group, n_groups - 1))
+            group_graph = LinkGraph.fully_connected(
+                n_groups, glb, link_bw, f"{name}_global")
+        return Fabric(name, "dragonfly", endpoints_per_node, nodes_per_switch,
+                      switches_per_group, n_groups, nic_bw, link_bw,
+                      switch_graph=switch_graph, group_graph=group_graph)
+
+    @staticmethod
+    def fat_tree(name: str, endpoints_per_node: int, nic_bw: float,
+                 nodes_per_switch: int = 16, switches_per_group: int = 18,
+                 n_groups: int = 8, taper: float = 2.0) -> "Fabric":
+        """Leaf/spine/core fat-tree with `taper`:1 oversubscription through the
+        core (Leonardo's 2:1, paper Sec. II): full NIC bandwidth inside a pod,
+        nic_bw/taper across pods."""
+        return Fabric(name, "fat_tree", endpoints_per_node, nodes_per_switch,
+                      switches_per_group, n_groups, nic_bw, nic_bw, taper=taper)
+
+    @staticmethod
+    def rail_optimized(name: str, endpoints_per_node: int, n_nodes: int,
+                       nic_bw: float, taper: float = 1.0) -> "Fabric":
+        """Rail-optimized: one switch plane (rail) per endpoint index; all
+        nodes attach to every rail.  Same-rail pairs are same_switch; the rest
+        cross the spine (same_group, tapered)."""
+        return Fabric(name, "rail", endpoints_per_node, n_nodes, 1, 1, nic_bw,
+                      nic_bw, taper=taper)
+
+    @staticmethod
+    def flat(name: str, endpoints_per_node: int, n_nodes: int,
+             nic_bw: float) -> "Fabric":
+        """Scalar-DCN stand-in: every node its own group, all inter traffic at
+        `nic_bw` classified diff_group (the legacy `dcn_bw` behavior)."""
+        return Fabric(name, "flat", endpoints_per_node, 1, 1, max(n_nodes, 1),
+                      nic_bw, nic_bw)
+
+
+def make_paper_fabrics() -> Dict[str, "Fabric"]:
+    """The three paper inter-node fabrics + the TPU DCN, sized so a
+    4096-endpoint job fits (paper Sec. V runs up to 4096 GPUs).
+
+    Alps / LUMI: Slingshot dragonfly (Sec. II); Leonardo modeled as the
+    2:1-tapered fat-tree of its NDR spine; TPU: flat DCN over pods."""
+    from .hw import ALPS, LEONARDO, LUMI, DCN_BW_PER_CHIP
+
+    return {
+        "alps": Fabric.dragonfly("alps_slingshot", ALPS.endpoints_per_node,
+                                 ALPS.nic_bw, nodes_per_switch=16,
+                                 switches_per_group=16, n_groups=32),
+        "leonardo": Fabric.fat_tree("leonardo_fattree", LEONARDO.endpoints_per_node,
+                                    LEONARDO.nic_bw, nodes_per_switch=16,
+                                    switches_per_group=18, n_groups=8, taper=2.0),
+        "lumi": Fabric.dragonfly("lumi_slingshot", LUMI.endpoints_per_node,
+                                 LUMI.nic_bw, nodes_per_switch=16,
+                                 switches_per_group=16, n_groups=16),
+        "tpu_v5e": Fabric.flat("tpu_dcn", 256, 16, DCN_BW_PER_CHIP),
+    }
+
+
 @dataclasses.dataclass
 class TwoLevelTopology:
-    """Pod (ICI torus) x DCN — the TPU analog of node/Dragonfly (paper Sec. V).
+    """Pod (ICI torus) x inter-node fabric — node/Dragonfly of the paper, Sec. V.
 
-    `intra` is the per-pod link graph; pods are connected over DCN with
-    `dcn_bw` bytes/s per endpoint.
+    `intra` is the per-pod (per-node) link graph; pods are connected by
+    `fabric`.  The legacy scalar construction `TwoLevelTopology(intra, n_pods,
+    dcn_bw)` still works: it builds a flat `Fabric` where every inter pair is
+    `diff_group` at `dcn_bw` bytes/s per endpoint.
     """
     intra: LinkGraph
-    n_pods: int
-    dcn_bw: float
+    n_pods: int = 0
+    dcn_bw: float = 0.0
+    fabric: Optional[Fabric] = None
+
+    def __post_init__(self):
+        if self.fabric is None:
+            self.fabric = Fabric.flat(f"{self.intra.name}_dcn", self.intra.n,
+                                      max(self.n_pods, 1), self.dcn_bw)
+        if not self.n_pods:
+            self.n_pods = self.fabric.n_nodes
+        if not self.dcn_bw:
+            # scalar view for legacy callers: the widest tier's bound
+            self.dcn_bw = self.fabric.asymptotic_alltoall_goodput()
+
+    @classmethod
+    def from_fabric(cls, intra: LinkGraph, fabric: Fabric) -> "TwoLevelTopology":
+        return cls(intra, fabric.n_nodes, 0.0, fabric)
 
     @property
     def n(self) -> int:
         return self.intra.n * self.n_pods
 
+    def tier_for_scale(self, n_endpoints: int) -> str:
+        return self.fabric.tier_for_scale(n_endpoints)
+
     def alltoall_asymptotic_goodput(self) -> float:
         """Paper Sec. V-C: for large scale, alltoall goodput per endpoint approaches
-        the inter-node (here DCN) bandwidth available to each endpoint."""
-        return self.dcn_bw
+        the inter-node (fabric) bandwidth available to each endpoint."""
+        return self.fabric.asymptotic_alltoall_goodput()
 
     def alltoall_expected_goodput(self, n_endpoints: int) -> float:
-        """Finite-size correction (Sec. V-C): only the fraction of traffic crossing
-        the inter-pod network is limited by DCN."""
+        """Finite-size correction (Sec. V-C): only the fraction of traffic
+        crossing the inter-node fabric is limited by it — capped by the
+        intra-node bound, which the fabric correction can never exceed (an
+        uncapped correction at n_endpoints = intra.n + 1 would claim
+        ~n * dcn_bw, beyond what the node physically sustains)."""
+        intra_bound = self.intra.alltoall_expected_goodput()
         if n_endpoints <= self.intra.n:
             # fall back to intra model on a sub-slice (approximate: full-pod EFI)
-            return self.intra.alltoall_expected_goodput()
+            return intra_bound
         frac_inter = (n_endpoints - self.intra.n) / max(n_endpoints - 1, 1)
-        return self.dcn_bw / max(frac_inter, 1e-9) if frac_inter < 1 else self.dcn_bw
+        tier_bw = self.fabric.tier_bw(self.fabric.tier_for_scale(n_endpoints))
+        return min(intra_bound, tier_bw / max(frac_inter, 1e-9))
 
     def allreduce_expected_goodput(self, n_endpoints: int) -> float:
         """Hierarchical allreduce: intra-pod RS -> inter-pod AR -> intra-pod AG.
-        The DCN phase moves bytes/n_intra per endpoint; goodput is min of phases."""
+        The fabric phase moves bytes/n_intra per endpoint; goodput is min of
+        phases, with the inter phase at the spanned tier's bandwidth."""
         intra = self.intra.allreduce_expected_goodput()
         if n_endpoints <= self.intra.n:
             return intra
-        dcn_phase = self.dcn_bw * self.intra.n / 2.0  # reduced-scatter shards cross DCN
+        tier_bw = self.fabric.tier_bw(self.fabric.tier_for_scale(n_endpoints))
+        dcn_phase = tier_bw * self.intra.n / 2.0  # reduce-scatter shards cross the fabric
         return min(intra, dcn_phase)
 
 
@@ -350,3 +708,15 @@ def make_tpu_multipod(n_pods: int = 2, nx: int = 16, ny: int = 16) -> TwoLevelTo
     from .hw import DCN_BW_PER_CHIP
 
     return TwoLevelTopology(make_tpu_pod(nx, ny), n_pods, DCN_BW_PER_CHIP)
+
+
+def make_paper_systems() -> Dict[str, TwoLevelTopology]:
+    """Full two-level system models: intra-node graph + inter-node fabric for
+    the three paper machines and the TPU multipod — what the at-scale scenario
+    suite (`core.scenarios`) sweeps from 8 to 4096 endpoints."""
+    fabrics = make_paper_fabrics()
+    systems = {name: TwoLevelTopology.from_fabric(graph, fabrics[name])
+               for name, graph in make_paper_node_graphs().items()}
+    systems["tpu_v5e"] = TwoLevelTopology.from_fabric(make_tpu_pod(),
+                                                      fabrics["tpu_v5e"])
+    return systems

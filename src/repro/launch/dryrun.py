@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import SHAPES, ModelConfig, ShapeConfig, get_config, list_configs, shape_applicable
-from ..core import hw
+from ..core import hw, topology
 from ..models.model import build_model
 from ..optim import adamw
 from ..runtime import steps as rsteps
@@ -133,7 +133,11 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         t_comp = flops / hw.PEAK_FLOPS_BF16
         t_mem = bytes_acc / hw.HBM_BW
         t_ici = colls.ici_bytes / (hw.ICI_LINK_BW * hw.ICI_LINKS)
-        t_dcn = colls.dcn_bytes / hw.DCN_BW_PER_CHIP
+        # DCN time at the fabric tier the mesh spans (flat TPU DCN today, so
+        # this equals DCN_BW_PER_CHIP — but a tapered fabric would shrink it)
+        fabric = topology.make_paper_fabrics()["tpu_v5e"]
+        dcn_tier = fabric.tier_for_scale(n_dev) if multi_pod else "same_switch"
+        t_dcn = colls.dcn_bytes / min(hw.DCN_BW_PER_CHIP, fabric.tier_bw(dcn_tier))
         terms = {"compute_s": t_comp, "memory_s": t_mem, "ici_s": t_ici, "dcn_s": t_dcn}
         dominant = max(terms, key=terms.get)
         step_s = max(terms.values())

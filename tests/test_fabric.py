@@ -1,0 +1,310 @@
+"""Inter-node fabric layer + at-scale scenario suite + at-scale bugfix
+regressions (dragonfly/fat-tree/rail constructors, tier classification,
+capped finite-size bounds, calibrated inter path, axis-cut bisection,
+adjacency caching, ceil node counting)."""
+import pytest
+
+from repro.core.bench import BenchRecord, IterStats
+from repro.core.calibrate import _key, fit_profile, split_key
+from repro.core.commplan import CommPlan
+from repro.core.costmodel import make_comm_model
+from repro.core.hw import LEONARDO, LUMI, gbit
+from repro.core.scenarios import (DEFAULT_ENDPOINTS, at_scale_suite,
+                                  check_paper_shapes, sweep_collective)
+from repro.core.topology import (Fabric, LinkGraph, TwoLevelTopology,
+                                 make_paper_fabrics, make_paper_systems,
+                                 make_tpu_multipod)
+
+
+@pytest.fixture(scope="module")
+def fabrics():
+    return make_paper_fabrics()
+
+
+@pytest.fixture(scope="module")
+def systems():
+    return make_paper_systems()
+
+
+# ----------------------------------------------------------- constructors
+def test_dragonfly_tier_classification(fabrics):
+    f = fabrics["alps"]  # 4 GPUs/node, 16 nodes/switch, 16 switches/group
+    assert f.kind == "dragonfly"
+    assert f.distance(0, 1) == "same_node"
+    assert f.distance(0, 4) == "same_switch"          # next node, same switch
+    assert f.distance(0, 16 * 4) == "same_group"      # switch 1, group 0
+    assert f.distance(0, 16 * 16 * 4) == "diff_group"  # first node of group 1
+    # tier_for_scale boundaries follow the packed-placement geometry
+    assert f.tier_for_scale(4) == "same_node"
+    assert f.tier_for_scale(64) == "same_switch"
+    assert f.tier_for_scale(65) == "same_group"
+    assert f.tier_for_scale(1024) == "same_group"
+    assert f.tier_for_scale(1025) == "diff_group"
+    assert f.tier_for_scale(4096) == "diff_group"
+
+
+def test_dragonfly_link_counts_and_graphs(fabrics):
+    for name in ("alps", "lumi"):
+        f = fabrics[name]
+        counts = f.tier_link_counts()
+        assert counts["same_switch"] == f.endpoints_per_switch
+        assert counts["same_group"] > 0 and counts["diff_group"] > 0
+        # fully-connected tier graphs: one path per pair (EFI = 1, Sec. IV-A)
+        assert f.switch_graph.edge_forwarding_index(per_link=False) == 1
+        assert f.group_graph.edge_forwarding_index(per_link=False) == 1
+        # injection-balanced sizing: the global links of one group carry the
+        # group's full injection, so the per-endpoint tier bound is the NIC
+        assert f.tier_bw("diff_group") == pytest.approx(f.nic_bw)
+
+
+def test_fat_tree_taper(fabrics):
+    f = fabrics["leonardo"]
+    assert f.kind == "fat_tree" and f.taper == 2.0
+    assert f.tier_bw("same_switch") == pytest.approx(LEONARDO.nic_bw)
+    assert f.tier_bw("same_group") == pytest.approx(LEONARDO.nic_bw)
+    assert f.tier_bw("diff_group") == pytest.approx(LEONARDO.nic_bw / 2.0)
+    counts = f.tier_link_counts()
+    # pod spine non-blocking (uplinks == downlinks); 2:1 taper at the core
+    assert counts["same_group"] == counts["same_switch"] * f.switches_per_group
+    assert counts["diff_group"] == f.endpoints_per_group * f.n_groups // 2
+
+
+def test_tier_bw_monotone_across_tiers(fabrics):
+    for f in fabrics.values():
+        assert f.tier_bw("same_switch") >= f.tier_bw("same_group") \
+            >= f.tier_bw("diff_group") > 0
+        assert f.bisection_bw() > 0
+
+
+def test_rail_optimized_classification():
+    f = Fabric.rail_optimized("rail8", endpoints_per_node=4, n_nodes=8,
+                              nic_bw=gbit(200), taper=2.0)
+    assert f.distance(0, 1) == "same_node"
+    assert f.distance(0, 4) == "same_switch"   # endpoint 0 of node 1: same rail
+    assert f.distance(1, 4) == "same_group"    # cross-rail: via the spine
+    assert f.tier_bw("same_switch") == pytest.approx(gbit(200))
+    assert f.tier_bw("same_group") == pytest.approx(gbit(100))
+
+
+def test_flat_fabric_is_legacy_dcn():
+    f = Fabric.flat("dcn", endpoints_per_node=256, n_nodes=4, nic_bw=gbit(25))
+    assert f.distance(0, 1) == "same_node"
+    assert f.distance(0, 256) == "diff_group"  # every inter pair is diff_group
+    for tier in ("same_switch", "same_group", "diff_group"):
+        assert f.tier_bw(tier) == pytest.approx(gbit(25))
+    assert f.asymptotic_alltoall_goodput() == pytest.approx(gbit(25))
+
+
+def test_two_level_scalar_construction_backward_compatible():
+    mp = make_tpu_multipod()
+    assert mp.fabric is not None and mp.fabric.kind == "flat"
+    assert mp.dcn_bw == pytest.approx(gbit(25))
+    assert mp.alltoall_asymptotic_goodput() == pytest.approx(gbit(25))
+    # from_fabric round-trip: n_pods and the scalar view are derived
+    f = Fabric.flat("dcn", mp.intra.n, 4, gbit(25))
+    t = TwoLevelTopology.from_fabric(mp.intra, f)
+    assert t.n_pods == 4 and t.dcn_bw == pytest.approx(gbit(25))
+
+
+# ----------------------------------------------------- bugfix regressions
+def test_finite_size_alltoall_capped_and_monotone(systems):
+    """Regression: the finite-size correction was unbounded — at
+    n = intra.n + 1 it returned ~n * dcn_bw, far beyond the intra bound."""
+    for name, topo in systems.items():
+        intra_bound = topo.intra.alltoall_expected_goodput()
+        prev = None
+        for n in (topo.intra.n, topo.intra.n + 1, topo.intra.n * 2, 1024, 4096):
+            g = topo.alltoall_expected_goodput(n)
+            assert g <= intra_bound * (1 + 1e-9), (name, n)
+            if prev is not None:
+                assert g <= prev * (1 + 1e-9), (name, n)
+            prev = g
+    # and on a legacy scalar-dcn construction
+    mp = make_tpu_multipod()
+    just_over = mp.alltoall_expected_goodput(mp.intra.n + 1)
+    assert just_over <= mp.intra.alltoall_expected_goodput()
+    assert mp.alltoall_expected_goodput(4096) >= mp.dcn_bw * 0.99
+
+
+def test_bisection_axis_cut_minimum():
+    """Regression: bisection was a contiguous index half-split, wrong for odd
+    nx and for y-axis-limited tori."""
+    assert LinkGraph.torus2d(3, 4, 1e9).bisection_bw() == pytest.approx(6e9)
+    # 2x8: the y cut (4 links) is narrower than the x half-split (16 links)
+    assert LinkGraph.torus2d(2, 8, 1e9).bisection_bw() == pytest.approx(4e9)
+    # symmetric even torus unchanged (the v5e pod bound tests depend on it)
+    assert LinkGraph.torus2d(16, 16, 1e9).bisection_bw() == pytest.approx(32e9)
+    assert LinkGraph.torus3d(2, 2, 4, 1e9).bisection_bw() == pytest.approx(8e9)
+    assert LinkGraph.ring(7, 1e9).bisection_bw() == pytest.approx(2e9)
+
+
+def test_adjacency_cached_and_correct():
+    """Regression (perf): neighbors() rescanned the whole edge dict per call;
+    the adjacency list is now built once and reused by the BFS/ECMP paths."""
+    g = LinkGraph.lumi_node(1.0)
+    assert g.neighbors(0) == [1, 2, 4]
+    assert g.degree_links(0) == 6
+    assert g._adjacency() is g._adjacency()  # cached, not rebuilt
+    # recompute from the edge dict: identical view
+    for u in range(g.n):
+        manual = sorted(b for (a, b) in g.links if a == u) + \
+            sorted(a for (a, b) in g.links if b == u)
+        assert sorted(manual) == g.neighbors(u)
+    # routing results unchanged by the cache
+    assert g.edge_forwarding_index() == pytest.approx(4.0)
+
+
+def test_allreduce_at_scale_ceil_node_count():
+    """Regression: n_nodes used floor division, so 12 endpoints on 8-GCD
+    nodes counted 1 node and the inter phase vanished."""
+    m = make_comm_model("lumi")
+    s = float(1 << 26)
+    nn = m.profile.endpoints_per_node
+    assert nn == 8
+    t8 = m.allreduce_at_scale(s, 8).seconds     # single node: intra only
+    t12 = m.allreduce_at_scale(s, 12).seconds   # 2 nodes: inter phase exists
+    t16 = m.allreduce_at_scale(s, 16).seconds
+    assert t12 > t8
+    assert t12 == pytest.approx(t16, rel=1e-6)  # both span ceil(12/8)=2 nodes
+
+
+def test_calibration_reaches_inter_node_path():
+    """Regression: CommModel._bw hard-coded MECH_EFFICIENCY_P2P_INTER even
+    when a CalibrationProfile was supplied — measured fits never affected
+    inter-node costs.  Now the untiered p2p fit overrides the inter
+    efficiency, and tier-qualified fits (@tier) refine it per tier."""
+    def rec(nbytes, t, tier=None):
+        return BenchRecord("pingpong/x", "mpi", "p2p", nbytes, 4,
+                           IterStats([t] * 3), nbytes / (t / 2), tier=tier)
+
+    bw_flat, bw_dg = 2e9, 0.5e9
+    records = []
+    for s in (1 << 10, 1 << 14, 1 << 20, 1 << 24):
+        records.append(rec(s, 2 * (20e-6 + s / bw_flat)))
+        records.append(rec(s, 2 * (80e-6 + s / bw_dg), tier="diff_group"))
+    prof = fit_profile(records, system="lumi", topology="lumi_node")
+    assert _key("mpi", "p2p", "large", "diff_group") in prof.params
+    assert prof.get("mpi", "p2p", "large") is not None  # untiered intact
+
+    plain = make_comm_model("lumi")
+    calib = make_comm_model("lumi", calibration=prof)
+    s = float(1 << 22)
+    # untiered measured 2e9 B/s replaces nic_bw * 0.90 = 11.25e9 B/s
+    t_plain = plain.p2p(s, "mpi", inter_node=True).seconds
+    t_calib = calib.p2p(s, "mpi", inter_node=True).seconds
+    assert t_calib > t_plain * 2
+    # the tier-qualified fit makes diff_group slower still, and its measured
+    # small-message alpha (80us) replaces the profile constant
+    t_dg = calib.p2p(s, "mpi", inter_node=True, distance="diff_group").seconds
+    assert t_dg > t_calib
+    assert calib.p2p(1.0, "mpi", inter_node=True, distance="diff_group").seconds \
+        == pytest.approx(80e-6, rel=0.05)
+
+
+# ------------------------------------------------------- calibrate tier keys
+def test_tier_key_roundtrip():
+    assert _key("mpi", "p2p", "small") == "mpi/p2p/small"
+    assert _key("mpi", "p2p", "small", "same_group") == "mpi/p2p/small@same_group"
+    assert split_key("ccl/alltoall/large") == ("ccl", "alltoall", "large", None)
+    assert split_key("mpi/p2p/small@diff_group") == \
+        ("mpi", "p2p", "small", "diff_group")
+
+
+def test_fit_profile_groups_tiers_separately():
+    def rec(mech, nbytes, t, tier):
+        return BenchRecord("r", mech, "p2p", nbytes, 8, IterStats([t] * 3),
+                           nbytes / (t / 2), tier=tier)
+
+    records = [rec("mpi", 4096, 1e-5, None), rec("mpi", 4096, 4e-5, "same_group"),
+               rec("mpi", 4096, 8e-5, "diff_group")]
+    prof = fit_profile(records)
+    assert set(prof.params) == {"mpi/p2p/small", "mpi/p2p/small@same_group",
+                                "mpi/p2p/small@diff_group"}
+    assert prof.get("mpi", "p2p", "small", tier="diff_group").alpha > \
+        prof.get("mpi", "p2p", "small", tier="same_group").alpha
+    # no silent fallback from tiered lookup to the intra fit
+    assert prof.get("mpi", "p2p", "small", tier="same_switch") is None
+
+
+# ------------------------------------------------------------ CommPlan tiers
+def test_commplan_tables_carry_distance_tiers(tmp_path):
+    plan = CommPlan.from_topology(make_tpu_multipod())
+    assert plan.tiers, "two-level plan should record per-axis-size tiers"
+    assert plan.distance_tier(4) == "intra"
+    assert plan.distance_tier(512) == "diff_group"
+    # group boundary forces the bounded-connection-state alltoall schedule
+    assert plan.all_to_all_algo(1 << 20, 512) == "pairwise"
+    f = tmp_path / "plan.json"
+    plan.save(str(f))
+    back = CommPlan.load(str(f))
+    assert back.tiers == plan.tiers
+    assert "fabric" in plan.meta
+
+
+def test_commplan_paper_fabric_tiers(systems):
+    plan = CommPlan.from_topology(systems["lumi"],
+                                  axis_sizes=(8, 64, 512, 4096, 32768))
+    assert plan.distance_tier(8) == "intra"
+    assert plan.distance_tier(64) == "same_switch"
+    assert plan.distance_tier(512) == "same_group"
+    assert plan.distance_tier(32768) == "diff_group"
+    assert plan.hierarchical
+
+
+# ------------------------------------------------------------- scenario suite
+@pytest.mark.parametrize("system", ["alps", "leonardo", "lumi", "tpu_v5e"])
+def test_paper_shapes_hold(system):
+    checks = check_paper_shapes(system)
+    bad = [k for k, ok in checks.items() if not ok]
+    assert not bad, f"{system}: {bad}"
+
+
+def test_alltoall_weak_scaling_approaches_nic_asymptote(systems):
+    """Sec. V-C: weak-scaling alltoall goodput decays monotonically and its
+    topology bound converges to the fabric's per-endpoint asymptote."""
+    topo = systems["alps"]
+    pts = sweep_collective("alps", "alltoall", "weak", "ccl", topo=topo)
+    gs = [p.goodput_bytes_s for p in pts]
+    assert all(b <= a for a, b in zip(gs, gs[1:]))
+    assert pts[-1].n_endpoints == 4096 and pts[-1].tier == "diff_group"
+    assert pts[-1].bound_bytes_s == pytest.approx(
+        topo.alltoall_asymptotic_goodput(), rel=0.01)
+    assert 0 < pts[-1].goodput_bytes_s <= pts[-1].bound_bytes_s
+
+
+def test_allreduce_hierarchical_min_of_phases(systems):
+    """Sec. V-A: at-scale allreduce is bounded by min(intra phase, fabric
+    phase) — goodput never exceeds the intra-node bound, and the fabric tier
+    bound shrinks across group boundaries on the tapered fat-tree."""
+    topo = systems["leonardo"]
+    intra = topo.intra.allreduce_expected_goodput()
+    pts = sweep_collective("leonardo", "allreduce", "weak", "ccl", topo=topo)
+    assert all(p.goodput_bytes_s <= intra for p in pts if p.n_endpoints > 4)
+    assert topo.allreduce_expected_goodput(4096) < \
+        topo.allreduce_expected_goodput(512)
+
+
+def test_strong_scaling_surfaces_latency():
+    """Strong scaling shrinks per-endpoint payloads, so goodput collapses
+    faster than weak scaling at the same endpoint count."""
+    weak = sweep_collective("lumi", "alltoall", "weak", "ccl")
+    strong = sweep_collective("lumi", "alltoall", "strong", "ccl")
+    assert strong[-1].payload_bytes < weak[-1].payload_bytes
+    assert strong[-1].goodput_bytes_s < weak[-1].goodput_bytes_s
+
+
+def test_noise_ordering_matches_obs8():
+    pts_ar = sweep_collective("leonardo", "allreduce", "weak", "ccl",
+                              endpoints=(1024,))
+    pts_a2a = sweep_collective("leonardo", "alltoall", "weak", "ccl",
+                               endpoints=(1024,))
+    drop = lambda p: 1 - p.noisy_goodput_bytes_s / p.goodput_bytes_s
+    assert drop(pts_ar[0]) > drop(pts_a2a[0])
+
+
+def test_at_scale_suite_covers_grid():
+    pts = at_scale_suite(systems=("lumi",), endpoints=(8, 64, 512),
+                         mechanisms=("ccl",))
+    assert len(pts) == 2 * 2 * 3  # collectives x scalings x endpoint counts
+    assert {p.tier for p in pts} >= {"same_switch", "same_group"}
+    assert all(p.seconds > 0 and p.goodput_bytes_s > 0 for p in pts)
