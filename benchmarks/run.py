@@ -201,6 +201,66 @@ def bench_at_scale():
     return rows
 
 
+def bench_overlap():
+    """Overlap engine (paper Sec. VI / Obs. 1): predicted hidden fraction
+    across the paper fabrics 8..4096 endpoints, the predictor's shape
+    self-checks, and — when the process has >= 2 devices — a live explicit-DP
+    overlap step on a small mesh (smoke for the scan-carried issue schedule +
+    chunked hierarchical pipeline)."""
+    import jax
+    from repro.core.scenarios import (PAPER_SYSTEMS, check_overlap_shapes,
+                                      sweep_overlap)
+    from .common import emit
+
+    rows = []
+    for system in PAPER_SYSTEMS:
+        checks = check_overlap_shapes(system)
+        bad = [k for k, ok in checks.items() if not ok]
+        assert not bad, f"{system}: overlap-shape checks failed: {bad}"
+        rows.append({"name": f"overlap/{system}/shape_checks",
+                     "us_per_call": 0.0, "derived": f"{len(checks)} ok"})
+        for p in sweep_overlap(system, (8, 64, 512, 4096)):
+            assert p.hidden_fraction > 0.0, \
+                f"{system} n={p.n_endpoints}: no comm hidden"
+            rows.append({
+                "name": f"overlap/{system}/n{p.n_endpoints}",
+                "us_per_call": p.exposed_s * 1e6,
+                "derived": f"hidden={p.hidden_fraction:.2f} "
+                           f"comm={p.total_comm_s*1e3:.1f}ms "
+                           f"chunks={p.chunks} bucket={p.bucket_bytes >> 20}MiB"})
+    if jax.device_count() >= 2:
+        import time as _time
+        import repro.compat  # noqa: F401
+        from jax.sharding import AxisType
+        from repro.configs import get_config
+        from repro.configs.base import ShapeConfig
+        from repro.models import build_model
+        from repro.optim import adamw
+        from repro.runtime import steps as rsteps
+
+        n = jax.device_count()
+        mesh = jax.make_mesh((n,), ("data",), axis_types=(AxisType.Auto,))
+        cfg = get_config("smollm-135m").reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        ostate = adamw.init_opt_state(params)
+        batch = model.make_batch(ShapeConfig("b", 32, 2 * n, "train"))
+        err = rsteps.init_error_state(params)
+        step = rsteps.build_explicit_dp_step(
+            model, adamw.OptConfig(), mesh, "data", overlap=True,
+            bucket_bytes=1 << 20, microbatches=2)
+        out = step(params, ostate, batch, err)
+        jax.block_until_ready(out[2]["loss"])
+        t0 = _time.perf_counter()
+        out = step(*out[:2], batch, out[3])
+        jax.block_until_ready(out[2]["loss"])
+        rows.append({"name": f"overlap/live/{n}dev_mb2",
+                     "us_per_call": (_time.perf_counter() - t0) * 1e6,
+                     "derived": f"loss={float(out[2]['loss']):.3f}"})
+    emit("overlap", rows, ["name", "us_per_call", "derived"])
+    return rows
+
+
 def main() -> None:
     from .figures import ALL_FIGURES
 
@@ -212,6 +272,7 @@ def main() -> None:
     sections["commplan"] = bench_commplan
     sections["calibrate"] = bench_calibrate
     sections["at_scale"] = bench_at_scale
+    sections["overlap"] = bench_overlap
     failures = []
     for name, fn in sections.items():
         if filters and not any(f in name for f in filters):

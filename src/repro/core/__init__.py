@@ -7,6 +7,8 @@ Public API:
   collectives: ALL_REDUCE_ALGOS, ALL_TO_ALL_ALGOS, hierarchical_all_reduce, ...
   bench:       time_fn, IterStats, BenchRecord, write_csv
   noise:       NoiseModel, ServiceLevelArbiter, StragglerMitigator
+  overlap:     make_buckets, chunked_hierarchical_all_reduce, choose_chunks
+               (overlap-aware execution engine over the plan)
   commplan:    CommPlan, PlanEntry (topology -> dispatch plan, the planning seam)
   autotune:    CollectivePolicy, default_policy (thin shim over commplan)
   characterize: characterize_mesh, project_at_scale
@@ -16,8 +18,14 @@ from . import hw
 from .topology import (Fabric, LinkGraph, TwoLevelTopology, make_paper_fabrics,
                        make_paper_node_graphs, make_paper_systems, make_tpu_pod,
                        make_tpu_multipod)
-from .costmodel import CommModel, make_comm_model, crossover_bytes
-from .scenarios import ScenarioPoint, at_scale_suite, check_paper_shapes, sweep_collective
+from .costmodel import (CommModel, OverlapEstimate, crossover_bytes,
+                        exposed_comm_time, make_comm_model)
+from .overlap import (Bucket, PipelineParams, choose_chunks,
+                      chunked_hierarchical_all_reduce, make_buckets,
+                      pipeline_time)
+from .scenarios import (OverlapPoint, ScenarioPoint, at_scale_suite,
+                        check_overlap_shapes, check_paper_shapes,
+                        sweep_collective, sweep_overlap)
 from .bench import IterStats, BenchRecord, time_fn, write_csv, gbps
 from .noise import NoiseModel, ServiceLevelArbiter, StragglerMitigator
 from .commplan import CommPlan, PlanEntry
@@ -29,6 +37,9 @@ __all__ = [
     "make_paper_node_graphs", "make_paper_systems", "make_tpu_pod",
     "make_tpu_multipod", "CommModel", "make_comm_model", "crossover_bytes",
     "ScenarioPoint", "at_scale_suite", "check_paper_shapes", "sweep_collective",
+    "OverlapEstimate", "exposed_comm_time", "Bucket", "PipelineParams",
+    "choose_chunks", "chunked_hierarchical_all_reduce", "make_buckets",
+    "pipeline_time", "OverlapPoint", "check_overlap_shapes", "sweep_overlap",
     "IterStats", "BenchRecord", "time_fn", "write_csv", "gbps", "NoiseModel",
     "ServiceLevelArbiter", "StragglerMitigator", "CommPlan", "PlanEntry",
     "CollectivePolicy", "default_policy", "CalibrationProfile", "FittedParams",

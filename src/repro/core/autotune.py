@@ -66,6 +66,15 @@ class CollectivePolicy:
     def bucket_bytes(self) -> int:
         return self._as_plan().bucket_bytes
 
+    @property
+    def hierarchical(self) -> bool:
+        return self._as_plan().hierarchical
+
+    def pipeline_chunks(self, nbytes: int) -> int:
+        """Chunk depth for the overlap engine's hierarchical pipeline (1 for
+        single-level plans)."""
+        return self._as_plan().pipeline_chunks(nbytes)
+
     def all_reduce(self, x: jnp.ndarray, axis: str, axis_size: int,
                    dcn_axis: Optional[str] = None) -> jnp.ndarray:
         """Trace-time dispatch (sizes are static under jit)."""

@@ -206,6 +206,10 @@ class CommPlan:
     # axis_size -> fabric distance tier the tables were ranked at ("intra" for
     # sizes inside the node/pod graph); empty for single-level plans.
     tiers: Dict[int, str] = dataclasses.field(default_factory=dict)
+    # per-tier alpha-beta constants of the hierarchical pipeline (n_ici,
+    # alpha_ici, bw_ici, alpha_dcn, bw_dcn) — feeds `pipeline_chunks` and the
+    # overlap predictor; empty for single-level plans.
+    pipeline: Dict[str, float] = dataclasses.field(default_factory=dict)
     stats: Dict[str, int] = dataclasses.field(default_factory=dict, compare=False)
 
     # ------------------------------------------------------------- builders
@@ -273,6 +277,23 @@ class CommPlan:
         slowest = (topo.allreduce_expected_goodput(n_full) if two_level
                    else bw.allreduce) * effs["all_reduce"][0]
         bucket = _bucket_from_crossover(a_exp, 2 * LOG2(n_full), slowest)
+        pipeline: Dict[str, float] = {}
+        if two_level:
+            # per-tier alpha-beta for the chunked hierarchical pipeline: the
+            # intra phases run at the graph's allreduce bound, the inter phase
+            # at the fabric tier the full topology spans (capped by the NIC)
+            tier = fabric.tier_for_scale(topo.n)
+            a_dcn = getattr(profile, f"inter_latency_{tier}",
+                            profile.inter_latency_diff_group) \
+                if tier != "same_node" else profile.inter_latency_same_switch
+            pipeline = {
+                "n_ici": float(graph.n),
+                "alpha_ici": a_exp,
+                "bw_ici": bw.allreduce * effs["all_reduce"][0],
+                "alpha_dcn": a_dcn,
+                "bw_dcn": min(profile.nic_bw, fabric.tier_bw(tier))
+                          * effs["all_reduce"][0],
+            }
         meta = {"source": "commplan", "topology": graph.name,
                 "profile": profile.name, "n_endpoints": str(topo.n)}
         if two_level:
@@ -284,7 +305,7 @@ class CommPlan:
                                    f"{getattr(calibration, 'system', '?')}/"
                                    f"n{getattr(calibration, 'n_endpoints', '?')}")
         return cls(ar, a2a, rs, ag, bucket_bytes=bucket, hierarchical=two_level,
-                   meta=meta, tiers=tiers)
+                   meta=meta, tiers=tiers, pipeline=pipeline)
 
     # -------------------------------------------------------------- lookups
     @staticmethod
@@ -317,6 +338,26 @@ class CommPlan:
             axis_size = min(self.tiers, key=lambda n: abs(
                 math.log2(n) - math.log2(max(axis_size, 1))))
         return self.tiers[axis_size]
+
+    def pipeline_params(self):
+        """The hierarchical pipeline's per-tier alpha-beta constants as an
+        `overlap.PipelineParams`, or None for single-level plans."""
+        if not (self.hierarchical and self.pipeline):
+            return None
+        from . import overlap
+        p = self.pipeline
+        return overlap.PipelineParams(int(p["n_ici"]), p["alpha_ici"],
+                                      p["bw_ici"], p["alpha_dcn"], p["bw_dcn"])
+
+    def pipeline_chunks(self, nbytes: int) -> int:
+        """Chunk count for the double-buffered hierarchical pipeline on an
+        `nbytes` bucket, chosen from the plan's per-tier alpha-beta fits
+        (1 = unpipelined; also the answer for single-level plans)."""
+        params = self.pipeline_params()
+        if params is None:
+            return 1
+        from . import overlap
+        return overlap.choose_chunks(float(max(nbytes, 1)), params)
 
     def all_reduce_algo(self, nbytes: int, axis_size: int, *, dcn: bool = False) -> str:
         if dcn and self.hierarchical:
@@ -389,6 +430,7 @@ class CommPlan:
             "bucket_bytes": self.bucket_bytes,
             "hierarchical": self.hierarchical,
             "tiers": {str(n): t for n, t in self.tiers.items()},
+            "pipeline": dict(self.pipeline),
         }
 
     @classmethod
@@ -405,6 +447,7 @@ class CommPlan:
             hierarchical=bool(blob.get("hierarchical", False)),
             meta=dict(blob.get("meta", {})),
             tiers={int(n): str(t) for n, t in blob.get("tiers", {}).items()},
+            pipeline={k: float(v) for k, v in blob.get("pipeline", {}).items()},
         )
 
     def save(self, path: str) -> None:

@@ -1,0 +1,282 @@
+"""Overlap-aware collective execution: hide communication behind compute.
+
+The paper's headline conclusion (Sec. VI, Obs. 1/4) is that measured
+interconnects leave bandwidth untapped and the biggest wins are software-level:
+issuing communication early enough that it overlaps the remaining compute, and
+pipelining the phases of hierarchical schedules so the slow tier streams while
+the fast tier works on the next chunk.  PRs 1-3 built the *planning* stack
+(CommPlan tables, measured calibration, fabric tiers); this module is the
+*execution* side that turns a plan into realized overlap:
+
+  * **Reverse-layer-order gradient buckets** (`make_buckets`): during backward,
+    the *last* layers' gradients materialize first, so bucket 0 holds the tail
+    of the flat gradient list.  Issued in bucket order, reductions start while
+    earlier layers' gradients are still being computed — instead of one
+    post-hoc blob after the full backward pass.
+  * **Scan-carried issue schedule** (`scan_bucket_reduce`): equal-size packed
+    buckets are reduced inside a `lax.scan`, which serializes the collectives
+    into an ordered comm stream (one bucket in flight at a time) that XLA's
+    latency-hiding scheduler can slot around independent compute — and which
+    is visible in the jaxpr as N per-bucket collectives, not one concatenation.
+  * **Chunked double-buffered hierarchical pipeline**
+    (`chunked_hierarchical_all_reduce`): each bucket is split into chunks so
+    the intra-node reduce-scatter of chunk k+1 is issued concurrently with the
+    inter-node all-reduce of chunk k and the intra-node all-gather of chunk
+    k-1 — the three tiers stream simultaneously instead of executing
+    store-and-forward.  Chunk count comes from the plan's per-tier alpha-beta
+    fits (`choose_chunks`): more chunks shrink the pipeline fill until the
+    per-chunk latency term dominates.
+
+All schedule arithmetic (`pipeline_time`, `bucket_schedule`) is closed-form
+alpha-beta and shared with `costmodel.exposed_comm_time`, so the predictor and
+the runtime agree on the same model.  Numerics are exact re-chunking: every
+path matches the unpipelined reduction bit-for-bit in fp32 when sums are
+exactly representable (validated in tests/test_collectives.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+from jax import lax
+
+from . import collectives as coll
+
+MAX_PIPELINE_CHUNKS = 16
+
+
+# ------------------------------------------------------------------- buckets
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """One reduction unit: contiguous spans of the flat gradient list.
+
+    `spans` are (tensor_index, lo, hi) element ranges; tensors are split at
+    bucket boundaries, so a bucket never exceeds `elems` (except when a single
+    element already does — a bucket always holds at least one element)."""
+
+    spans: Tuple[Tuple[int, int, int], ...]
+    elems: int
+
+    @property
+    def n_elems(self) -> int:
+        return sum(hi - lo for _, lo, hi in self.spans)
+
+
+def make_buckets(sizes: Sequence[int], bucket_elems: int,
+                 reverse: bool = True) -> List[Bucket]:
+    """Assign per-tensor element counts to fixed-size buckets.
+
+    With `reverse=True` (the overlap schedule), tensors are walked from the
+    *end* of the list — reverse layer order, because backward produces the last
+    layers' gradients first — so bucket 0 is ready earliest during backward.
+    `bucket_elems` below one element is clamped to 1 (each element becomes its
+    own bucket rather than an infinite loop / zero-size bucket).
+    """
+    cap = max(int(bucket_elems), 1)
+    order = range(len(sizes) - 1, -1, -1) if reverse else range(len(sizes))
+    buckets: List[Bucket] = []
+    cur: List[Tuple[int, int, int]] = []
+    cur_n = 0
+    for i in order:
+        pos = 0
+        size = int(sizes[i])
+        while pos < size:
+            take = min(size - pos, cap - cur_n)
+            cur.append((i, pos, pos + take))
+            cur_n += take
+            pos += take
+            if cur_n == cap:
+                buckets.append(Bucket(tuple(cur), cap))
+                cur, cur_n = [], 0
+    if cur:
+        buckets.append(Bucket(tuple(cur), cap))
+    return buckets
+
+
+def pack_buckets(flat_g: Sequence[jnp.ndarray], buckets: Sequence[Bucket],
+                 scale: float = 1.0, pad: bool = True):
+    """Stack buckets into one (n_buckets, bucket_elems) fp32 array (the scan
+    carrier).  The final partial bucket is zero-padded — zeros are the identity
+    of the reduction, so padding never changes results.  With `pad=False` a
+    single bucket keeps its exact wire size and the return is a one-element
+    list (rows can be ragged, so no stacking)."""
+    assert pad or len(buckets) == 1, "pad=False packs exactly one bucket"
+    cap = buckets[0].elems
+    rows = []
+    for b in buckets:
+        parts = [flat_g[i].astype(jnp.float32).reshape(-1)[lo:hi] * scale
+                 for i, lo, hi in b.spans]
+        row = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+        if pad and row.shape[0] < cap:
+            row = jnp.concatenate([row, jnp.zeros((cap - row.shape[0],), jnp.float32)])
+        rows.append(row)
+    return jnp.stack(rows) if pad else rows
+
+
+def unpack_buckets(reduced, buckets: Sequence[Bucket],
+                   flat_g: Sequence[jnp.ndarray]) -> List[jnp.ndarray]:
+    """Scatter reduced bucket rows (a stacked 2-D array or a list of 1-D rows)
+    back into per-tensor fp32 arrays with the original shapes (inverse of
+    `pack_buckets`).  Zero-size tensors — which own no bucket span — come back
+    as fp32 zeros of their original shape."""
+    # spans were appended in bucket construction order; collect per tensor in
+    # ascending (lo, hi) order so concatenation restores the flat layout
+    pieces: List[List[Tuple[int, jnp.ndarray]]] = [[] for _ in flat_g]
+    for k, b in enumerate(buckets):
+        row = reduced[k]
+        off = 0
+        for i, lo, hi in b.spans:
+            pieces[i].append((lo, row[off: off + hi - lo]))
+            off += hi - lo
+    out = []
+    for g, ps in zip(flat_g, pieces):
+        if not ps:
+            out.append(jnp.zeros(g.shape, jnp.float32))
+            continue
+        ps.sort(key=lambda t: t[0])
+        parts = [p for _, p in ps]
+        flat = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+        out.append(flat.reshape(g.shape))
+    return out
+
+
+def scan_bucket_reduce(stacked: jnp.ndarray,
+                       reduce_fn: Callable[[jnp.ndarray], jnp.ndarray]) -> jnp.ndarray:
+    """Issue one bucket reduction per `lax.scan` step — the serialized comm
+    stream.  The scan is the issue schedule: bucket k+1's reduction cannot be
+    launched before bucket k's (one bucket in flight), matching the wire model
+    in `bucket_schedule`, and the jaxpr shows a scan of per-bucket collectives
+    instead of one monolithic post-hoc reduction."""
+
+    def body(tok, bucket):
+        return tok, reduce_fn(bucket)
+
+    _, reduced = lax.scan(body, jnp.zeros((), jnp.float32), stacked)
+    return reduced
+
+
+# ------------------------------------------------- chunked hierarchical pipe
+@coll.register("all_reduce", "hierarchical_chunked", multi_axis=True)
+def chunked_hierarchical_all_reduce(x: jnp.ndarray, ici_axis: str, dcn_axis: str,
+                                    n_chunks: int = 2) -> jnp.ndarray:
+    """Software-pipelined hierarchical all-reduce: the buffer is split into
+    `n_chunks` chunks and the three phases are issued stage-interleaved so
+
+        stage t:  intra AG(chunk t-2) | inter AR(chunk t-1) | intra RS(chunk t)
+
+    run concurrently (double buffering generalized to a 3-deep pipeline).  The
+    three issues inside one stage have no data dependencies on each other, so
+    the compiler may overlap the slow inter tier with both intra phases.
+    Numerically identical to `hierarchical_all_reduce` (pure re-chunking).
+    """
+    n = lax.axis_size(ici_axis)
+    n_chunks = max(int(n_chunks), 1)
+    if n_chunks == 1:
+        return coll.hierarchical_all_reduce(x, ici_axis, dcn_axis)
+    flat = x.astype(jnp.float32).reshape(-1) if x.dtype != jnp.float32 \
+        else x.reshape(-1)
+    # chunk length must divide the ici axis so reduce-scatter needs no pad
+    chunk_elems = -(-flat.shape[0] // n_chunks)
+    chunk_elems = -(-chunk_elems // n) * n
+    pad = n_chunks * chunk_elems - flat.shape[0]
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    chunks = flat.reshape(n_chunks, chunk_elems)
+    rs: List[Optional[jnp.ndarray]] = [None] * n_chunks
+    ar: List[Optional[jnp.ndarray]] = [None] * n_chunks
+    ag: List[Optional[jnp.ndarray]] = [None] * n_chunks
+    for t in range(n_chunks + 2):
+        # issue order within a stage is oldest-first: drain the pipe tail
+        # (AG of t-2), keep the inter tier busy (AR of t-1), then feed it
+        # (RS of t).  All three are data-independent.
+        if 0 <= t - 2 < n_chunks:
+            ag[t - 2] = coll.ring_all_gather(ar[t - 2], ici_axis)
+        if 0 <= t - 1 < n_chunks:
+            ar[t - 1] = lax.psum(rs[t - 1], dcn_axis)
+        if t < n_chunks:
+            rs[t] = coll.ring_reduce_scatter(chunks[t], ici_axis)
+    out = jnp.concatenate([a.reshape(-1) for a in ag])
+    return out[: x.size].reshape(x.shape).astype(x.dtype)
+
+
+# ------------------------------------------------------- closed-form schedule
+@dataclasses.dataclass(frozen=True)
+class PipelineParams:
+    """Per-tier alpha-beta constants of the hierarchical pipeline, as persisted
+    on a CommPlan (plan.pipeline) or derived from a CommModel."""
+
+    n_ici: int
+    alpha_ici: float
+    bw_ici: float       # intra-tier effective bytes/s (allreduce-phase bound)
+    alpha_dcn: float
+    bw_dcn: float       # inter-tier effective bytes/s per endpoint
+
+    def stage_times(self, chunk_bytes: float) -> Tuple[float, float, float]:
+        """(reduce-scatter, inter all-reduce, all-gather) seconds per chunk."""
+        n = max(self.n_ici, 2)
+        frac = (n - 1) / n
+        t_rs = (n - 1) * self.alpha_ici + chunk_bytes * frac / self.bw_ici
+        t_ag = t_rs
+        t_ar = self.alpha_dcn + (chunk_bytes / n) / self.bw_dcn
+        return t_rs, t_ar, t_ag
+
+
+def pipeline_time(nbytes: float, n_chunks: int, params: PipelineParams) -> float:
+    """Pipelined hierarchical all-reduce time for `nbytes` split into
+    `n_chunks` chunks: fill (one chunk through all three stages) plus steady
+    state paced by the slowest stage.  n_chunks=1 degenerates to the
+    store-and-forward sum of phases."""
+    n_chunks = max(int(n_chunks), 1)
+    ts = params.stage_times(nbytes / n_chunks)
+    return sum(ts) + (n_chunks - 1) * max(ts)
+
+
+def choose_chunks(nbytes: float, params: PipelineParams,
+                  max_chunks: int = MAX_PIPELINE_CHUNKS) -> int:
+    """Chunk count minimizing the pipelined time: more chunks shrink the fill
+    cost until the per-chunk alpha terms dominate (the paper's latency /
+    bandwidth tension, applied to pipeline depth)."""
+    best, best_t = 1, pipeline_time(nbytes, 1, params)
+    c = 2
+    while c <= max_chunks:
+        t = pipeline_time(nbytes, c, params)
+        if t < best_t:
+            best, best_t = c, t
+        c *= 2
+    return best
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketTimeline:
+    """One bucket's life on the wire in the overlap schedule."""
+
+    ready_s: float      # when its gradients have materialized during backward
+    start_s: float      # when the serialized comm stream gets to it
+    end_s: float
+    comm_s: float
+
+
+def bucket_schedule(compute_time: float, bucket_bytes: Sequence[float],
+                    bucket_comm_s: Sequence[float]) -> List[BucketTimeline]:
+    """The overlap wire model shared by predictor and runtime semantics.
+
+    Buckets are in issue order (reverse layer order): bucket i's gradients
+    materialize once the backward has produced the last `sum(bytes[:i+1])`
+    bytes of gradient, i.e. at `compute_time * cum_frac_i` (backward progress
+    modeled linear in gradient bytes).  The comm stream is serial: bucket i
+    starts at `max(ready_i, end_{i-1})`.
+    """
+    total = sum(bucket_bytes) or 1.0
+    out: List[BucketTimeline] = []
+    cum = 0.0
+    prev_end = 0.0
+    for b, t in zip(bucket_bytes, bucket_comm_s):
+        cum += b
+        ready = compute_time * (cum / total)
+        start = max(ready, prev_end)
+        end = start + t
+        out.append(BucketTimeline(ready, start, end, t))
+        prev_end = end
+    return out

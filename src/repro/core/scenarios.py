@@ -23,7 +23,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence
 
-from .costmodel import CommModel, make_comm_model
+from .costmodel import (CommModel, exposed_comm_time, make_comm_model,
+                        pipeline_params_at_scale)
 from .noise import NoiseModel
 from .topology import TwoLevelTopology, make_paper_systems
 
@@ -166,4 +167,124 @@ def check_paper_shapes(system: str,
             <= noise.goodput_scaling(n_big, nn, "alltoall"),
         # untapped bandwidth: the achieved curve sits below the fabric bound
         "untapped_bandwidth_gap": last.goodput_bytes_s < last.bound_bytes_s,
+    }
+
+
+# ----------------------------------------------------------- overlap sweeps
+DEFAULT_GRAD_BYTES = 1 << 30   # ~256M-param fp32 gradient, the sweep payload
+
+
+def synthetic_grad_sizes(total_bytes: int = DEFAULT_GRAD_BYTES,
+                         n_layers: int = 32) -> List[int]:
+    """A transformer-shaped gradient byte list: one large embedding first (20%
+    of the bytes, the forward's first / backward's last gradient) followed by
+    `n_layers` equal decoder layers."""
+    emb = total_bytes // 5
+    per_layer = (total_bytes - emb) // n_layers
+    sizes = [emb] + [per_layer] * n_layers
+    sizes[-1] += total_bytes - sum(sizes)  # exact total
+    return sizes
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlapPoint:
+    """One (system, scale, schedule) evaluation of the overlap predictor."""
+
+    system: str
+    n_endpoints: int
+    bucket_bytes: int
+    chunks: int
+    compute_s: float
+    total_comm_s: float
+    exposed_s: float
+    hidden_fraction: float
+
+
+def sweep_overlap(system: str,
+                  endpoints: Sequence[int] = DEFAULT_ENDPOINTS,
+                  grad_bytes: int = DEFAULT_GRAD_BYTES,
+                  compute_intensity: float = 1.0,
+                  bucket_bytes: Optional[int] = None,
+                  chunks: Optional[int] = None,
+                  mechanism: str = "ccl",
+                  model: Optional[CommModel] = None) -> List[OverlapPoint]:
+    """Fraction of gradient-reduction time hidden behind backward compute vs
+    endpoint count (Sec. VI: the overlap win the measured fabrics leave on the
+    table).  `compute_intensity` scales the backward time relative to the
+    *unhidden* comm time at each scale: 1.0 means backward exactly as long as
+    the full reduction, >1 compute-bound, <1 comm-bound.  `bucket_bytes` /
+    `chunks` override the plan's own choices to sweep the schedule knobs."""
+    from .commplan import CommPlan
+
+    model = model or make_comm_model(system)
+    topo = make_paper_systems()[system]
+    plan = CommPlan.from_topology(topo)
+    if bucket_bytes:
+        plan = dataclasses.replace(plan, bucket_bytes=int(bucket_bytes))
+    sizes = synthetic_grad_sizes(grad_bytes)
+    points: List[OverlapPoint] = []
+    for n in endpoints:
+        base = exposed_comm_time(0.0, plan, sizes, n_endpoints=n, model=model,
+                                 chunks=chunks, mechanism=mechanism)
+        compute_s = compute_intensity * base.total_comm_s
+        est = exposed_comm_time(compute_s, plan, sizes, n_endpoints=n,
+                                model=model, chunks=chunks, mechanism=mechanism)
+        points.append(OverlapPoint(system, n, plan.bucket_bytes, est.chunks,
+                                   compute_s, est.total_comm_s, est.exposed_s,
+                                   est.hidden_fraction))
+    return points
+
+
+def check_overlap_shapes(system: str,
+                         endpoints: Sequence[int] = DEFAULT_ENDPOINTS,
+                         grad_bytes: int = DEFAULT_GRAD_BYTES) -> Dict[str, bool]:
+    """Qualitative shape checks tying `exposed_comm_time` to the paper's
+    overlap story — the acceptance oracles for the overlap engine."""
+    from .overlap import pipeline_time
+    from .commplan import CommPlan
+
+    model = make_comm_model(system)
+    n_big = endpoints[-1]
+    # 1) hidden fraction grows with compute intensity (more backward to hide
+    #    behind) and a compute-bound step hides nearly everything
+    by_intensity = [sweep_overlap(system, (n_big,), grad_bytes, ci,
+                                  model=model)[0].hidden_fraction
+                    for ci in (0.25, 1.0, 4.0)]
+    grows = all(b >= a - 1e-9 for a, b in zip(by_intensity, by_intensity[1:]))
+    # 2) sanity: exposed in [0, total]; some comm is hidden at intensity 1
+    pts = sweep_overlap(system, endpoints, grad_bytes, 1.0, model=model)
+    bounded = all(0.0 <= p.exposed_s <= p.total_comm_s * (1 + 1e-9) for p in pts)
+    some_hidden = all(p.hidden_fraction > 0.0 for p in pts)
+    # 3) pipeline time is monotone non-increasing in chunk count until the
+    #    per-chunk alpha terms dominate, then non-decreasing (unimodal) — and
+    #    a latency-dominated payload is best left unchunked
+    params = pipeline_params_at_scale(model, n_big)
+    plan = CommPlan.from_topology(make_paper_systems()[system])
+    depths = [1, 2, 4, 8, 16]
+    times = [pipeline_time(plan.bucket_bytes, c, params) for c in depths]
+    best = times.index(min(times))
+    unimodal = (all(b <= a * (1 + 1e-9) for a, b in zip(times[:best + 1],
+                                                        times[1:best + 1]))
+                and all(b >= a * (1 - 1e-9) for a, b in zip(times[best:],
+                                                            times[best + 1:])))
+    tiny = [pipeline_time(256.0, c, params) for c in depths]
+    alpha_dominated = tiny.index(min(tiny)) == 0
+    # 4) at fixed compute time, scaling out (more exposed wire time per byte)
+    #    never hides a larger fraction
+    compute_s = pts[0].compute_s
+    hf = []
+    plan_sizes = synthetic_grad_sizes(grad_bytes)
+    for n in endpoints:
+        est = exposed_comm_time(compute_s, plan, plan_sizes, n_endpoints=n,
+                                model=model)
+        hf.append(est.hidden_fraction)
+    scale_monotone = all(b <= a + 1e-9 for a, b in zip(hf, hf[1:]))
+    return {
+        "hidden_grows_with_compute": grows,
+        "compute_bound_hides_most": by_intensity[-1] >= 0.9,
+        "exposed_bounded": bounded,
+        "overlap_always_helps": some_hidden,
+        "chunks_monotone_until_alpha": unimodal,
+        "tiny_payload_unchunked": alpha_dominated,
+        "scaling_out_exposes_more": scale_monotone,
     }

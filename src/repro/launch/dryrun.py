@@ -141,6 +141,25 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         terms = {"compute_s": t_comp, "memory_s": t_mem, "ici_s": t_ici, "dcn_s": t_dcn}
         dominant = max(terms, key=terms.get)
         step_s = max(terms.values())
+        # overlap-aware refinement (core.costmodel.exposed_comm_time): the
+        # roofline's max(terms) assumes perfect overlap and sum(terms) none;
+        # the predictor schedules the gradient buckets against the backward
+        # and charges only the comm that drains past it.  Train cells only.
+        overlap_terms = {}
+        if shape.kind == "train":
+            from ..core.commplan import CommPlan
+            from ..core.costmodel import exposed_comm_time
+            topo = topology.make_tpu_multipod() if multi_pod else topology.make_tpu_pod()
+            plan = CommPlan.from_topology(topo)
+            grad_sizes = [int(a.size) * 4 for a in
+                          jax.tree.leaves(model.abstract_params())]
+            est = exposed_comm_time(t_comp, plan, grad_sizes, n_endpoints=n_dev)
+            overlap_terms = dict(
+                exposed_comm_s=est.exposed_s,
+                hidden_comm_fraction=est.hidden_fraction,
+                overlap_chunks=est.chunks,
+                step_time_overlap_s=t_comp + est.exposed_s,
+            )
         cell.update(
             status="ok",
             microbatches=mb,
@@ -162,6 +181,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             collectives=colls.row(),
             roofline=dict(
                 **terms,
+                **overlap_terms,
                 dominant=dominant,
                 step_time_bound_s=step_s,
                 model_flops_per_device=mf,

@@ -61,6 +61,16 @@ def main(argv=None):
     ap.add_argument("--bucket-bytes", type=int, default=None,
                     help="gradient bucket size for --explicit-dp (default: the "
                          "plan's latency/bandwidth crossover; 0 = per-tensor)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="overlap-aware explicit-DP execution (implies "
+                         "--explicit-dp): reverse-layer-order gradient buckets "
+                         "on a scan-carried issue schedule; with --microbatches "
+                         "each bucket's reduction overlaps the next "
+                         "microbatch's backward; on a PxDx1 mesh buckets run "
+                         "the chunked hierarchical pipeline")
+    ap.add_argument("--chunks", type=int, default=None,
+                    help="hierarchical pipeline depth for --overlap (default: "
+                         "chosen from the plan's per-tier alpha-beta fits)")
     ap.add_argument("--straggler-threshold", type=float, default=2.5)
     args = ap.parse_args(argv)
 
@@ -79,6 +89,8 @@ def main(argv=None):
     if shape.kind != "train":
         raise SystemExit(f"--shape {args.shape} is a {shape.kind} shape; use launch.serve")
 
+    if args.overlap:
+        args.explicit_dp = True  # overlap is an explicit-DP execution mode
     # explicit-DP wants a pure-DP default mesh (model dim 1)
     mesh = parse_mesh(args.mesh) if args.mesh \
         else make_host_mesh(model=1 if args.explicit_dp else 0)
@@ -135,7 +147,8 @@ def main(argv=None):
                     ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir,
                     log_every=10, straggler_threshold=args.straggler_threshold,
                     explicit_dp=args.explicit_dp, dcn_axis=dcn_axis,
-                    policy=policy, bucket_bytes=args.bucket_bytes),
+                    policy=policy, bucket_bytes=args.bucket_bytes,
+                    overlap=args.overlap, chunks=args.chunks),
         mesh=mesh,
     )
     result = trainer.run(resume=args.resume)

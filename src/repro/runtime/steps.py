@@ -37,7 +37,15 @@ class StepBundle:
 
 
 def _microbatch(batch, n: int):
-    return jax.tree.map(lambda a: a.reshape((n, a.shape[0] // n) + a.shape[1:]), batch)
+    def split(a):
+        if a.shape[0] % n:
+            raise ValueError(
+                f"batch leading axis {a.shape[0]} is not divisible by "
+                f"microbatches={n}; choose a microbatch count that divides "
+                f"the (per-shard) batch size")
+        return a.reshape((n, a.shape[0] // n) + a.shape[1:])
+
+    return jax.tree.map(split, batch)
 
 
 def build_train_step(model: Model, opt: adamw.OptConfig,
@@ -135,7 +143,10 @@ def build_explicit_dp_step(model: Model, opt: adamw.OptConfig, mesh, axis: str =
                            policy: Optional[CollectivePolicy] = None,
                            compress_bits: int = 0,
                            bucket_bytes: Optional[int] = None,
-                           dcn_axis: Optional[str] = None) -> Callable:
+                           dcn_axis: Optional[str] = None,
+                           overlap: bool = False,
+                           microbatches: int = 1,
+                           chunks: Optional[int] = None) -> Callable:
     """Pure-DP train step under shard_map with explicit gradient collectives.
 
     Params/opt state replicated; batch sharded on `axis` (and `dcn_axis` when
@@ -152,59 +163,137 @@ def build_explicit_dp_step(model: Model, opt: adamw.OptConfig, mesh, axis: str =
     raises.  `dcn_axis` on a two-pod mesh routes
     every bucket through the hierarchical intra-RS / inter-AR / intra-AG
     schedule (selected whenever the plan was built from a two-level topology).
+
+    Overlap (`overlap=True`, paper Sec. VI / Obs. 1): buckets are built in
+    *reverse layer order* (the order backward materializes gradients) and
+    reduced through `core.overlap`'s scan-carried issue schedule — one bucket
+    in flight at a time instead of one post-hoc blob.  With `microbatches > 1`
+    the scan carries the previous microbatch's unreduced buckets, so each
+    bucket's all-reduce is issued *inside the same scan step* as the next
+    microbatch's backward and overlaps it.  With `dcn_axis`, each bucket runs
+    the chunked double-buffered hierarchical pipeline; `chunks=None` takes the
+    pipeline depth from the plan's per-tier alpha-beta fits
+    (`plan.pipeline_chunks`).  Overlap implies bucketing and therefore
+    excludes `compress_bits`.
     """
     from jax.sharding import PartitionSpec as P
-    from ..core import collectives as coll
+    from ..core import overlap as ov
 
     policy = policy or CollectivePolicy.from_model()
     n = mesh.shape[axis]
     n_total = n * (mesh.shape[dcn_axis] if dcn_axis is not None else 1)
-    if compress_bits and bucket_bytes:
-        raise ValueError("gradient bucketing does not compose with int8 "
-                         "compression (per-tensor scales); pass bucket_bytes=0")
+    if compress_bits and (bucket_bytes or overlap):
+        raise ValueError("gradient bucketing/overlap does not compose with "
+                         "int8 compression (per-tensor scales); pass "
+                         "bucket_bytes=0 and overlap=False")
+    if microbatches > 1 and not overlap:
+        raise ValueError("explicit-DP microbatching is implemented by the "
+                         "overlap schedule; pass overlap=True")
+    if overlap and bucket_bytes == 0:
+        # the overlap scan needs equal-size packed buckets — refuse the
+        # documented per-tensor mode instead of silently re-bucketing
+        raise ValueError("overlap=True requires bucketing; per-tensor "
+                         "reduction (bucket_bytes=0) is not supported — omit "
+                         "bucket_bytes to use the plan's crossover")
     if bucket_bytes is None:
         bucket_bytes = 0 if compress_bits else getattr(policy, "bucket_bytes", 0)
+    if overlap and not bucket_bytes:
+        bucket_bytes = 4 << 20  # policy carried no crossover (legacy tables)
     loss_axes = (dcn_axis, axis) if dcn_axis is not None else axis
+    plan_hier = bool(getattr(policy, "hierarchical", False))
+    if chunks is None:
+        chunks_fn = getattr(policy, "pipeline_chunks", None)
+        chunks = chunks_fn(bucket_bytes) if (chunks_fn is not None and
+                                             dcn_axis is not None) else 1
+    chunks = max(int(chunks), 1)
+
+    def reduce_bucket(buf):
+        """One packed fp32 bucket through the planned reduction: the chunked
+        hierarchical pipeline on a two-level mesh, else the plan's algorithm."""
+        if dcn_axis is not None and plan_hier and chunks > 1:
+            return ov.chunked_hierarchical_all_reduce(buf, axis, dcn_axis,
+                                                      n_chunks=chunks)
+        return policy.all_reduce(buf, axis, n, dcn_axis=dcn_axis)
 
     def reduce_bucketed(flat_g):
         """Pack the flat gradient stream into exact bucket_bytes chunks (tensors
-        split at bucket boundaries) and reduce each — exactly
+        split at bucket boundaries, forward order) and reduce each — exactly
         ceil(total_bytes / bucket_bytes) all-reduce calls, with transient memory
-        bounded by ~one bucket rather than a full concatenated gradient copy."""
+        bounded by ~one bucket rather than a full concatenated gradient copy.
+        Span construction and scatter-back are shared with the overlap engine
+        (`core.overlap`); only the issue schedule differs (eager, post-backward)."""
         elems = max(bucket_bytes // 4, 1)  # fp32 on the wire
-        segs = [[] for _ in flat_g]        # reduced pieces per tensor, in order
-        cur, cur_n = [], 0                 # (tensor idx, lo, hi) in this bucket
+        buckets = ov.make_buckets([g.size for g in flat_g], elems, reverse=False)
+        rows = [policy.all_reduce(
+                    ov.pack_buckets(flat_g, [b], 1.0 / n_total, pad=False)[0],
+                    axis, n, dcn_axis=dcn_axis)
+                for b in buckets]
+        return ov.unpack_buckets(rows, buckets, flat_g)
 
-        def flush():
-            nonlocal cur, cur_n
-            if not cur:
-                return
-            parts = [flat_g[i].astype(jnp.float32).reshape(-1)[lo:hi] / n_total
-                     for i, lo, hi in cur]
-            buf = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
-            red = policy.all_reduce(buf, axis, n, dcn_axis=dcn_axis)
-            off = 0
-            for i, lo, hi in cur:
-                segs[i].append(red[off: off + hi - lo])
-                off += hi - lo
-            cur, cur_n = [], 0
+    def overlap_grads(params, batch):
+        """Reverse-layer-order bucketed gradients under the overlap issue
+        schedule.  Returns (mean loss over microbatches, reduced flat grads in
+        fp32, tree def)."""
+        inv = 1.0 / (n_total * microbatches)
 
-        for i, g in enumerate(flat_g):
-            pos = 0
-            while pos < g.size:
-                take = min(g.size - pos, elems - cur_n)
-                cur.append((i, pos, pos + take))
-                cur_n += take
-                pos += take
-                if cur_n == elems:
-                    flush()
-        flush()
-        return [
-            (jnp.concatenate(ps) if len(ps) > 1 else ps[0]).reshape(g.shape)
-            for g, ps in zip(flat_g, segs)
-        ]
+        def grads_of(b):
+            loss, grads = jax.value_and_grad(model.loss)(params, b)
+            flat, tdef = jax.tree.flatten(grads)
+            return loss, flat, tdef
+
+        if microbatches == 1:
+            loss, flat_g, tdef = grads_of(batch)
+            buckets = ov.make_buckets([g.size for g in flat_g],
+                                      max(bucket_bytes // 4, 1))
+            if not buckets:  # every gradient leaf is zero-size
+                return loss, [g.astype(jnp.float32) for g in flat_g], tdef
+            stacked = ov.pack_buckets(flat_g, buckets, inv)
+            # scan-carried issue schedule: one bucket in flight at a time, in
+            # the order backward materializes them
+            reduced = ov.scan_bucket_reduce(stacked, reduce_bucket)
+            return loss, ov.unpack_buckets(reduced, buckets, flat_g), tdef
+
+        mb = _microbatch(batch, microbatches)
+        mb0 = jax.tree.map(lambda a: a[0], mb)
+        rest = jax.tree.map(lambda a: a[1:], mb)
+        loss0, flat0, tdef = grads_of(mb0)
+        buckets = ov.make_buckets([g.size for g in flat0],
+                                  max(bucket_bytes // 4, 1))
+        if not buckets:
+            raise ValueError("overlap microbatching found no gradient "
+                             "elements to reduce (all leaves zero-size)")
+        pending0 = ov.pack_buckets(flat0, buckets, inv)
+
+        def body(carry, b):
+            acc, pending, lsum = carry
+            # issue the previous microbatch's bucket reductions FIRST: they
+            # have no data dependency on this microbatch's backward, so the
+            # scheduler overlaps the reduction stream with the backward compute
+            reduced = jnp.stack([reduce_bucket(pending[k])
+                                 for k in range(len(buckets))])
+            loss, flat, _ = grads_of(b)
+            nxt = ov.pack_buckets(flat, buckets, inv)
+            return (acc + reduced, nxt, lsum + loss), None
+
+        init = (jnp.zeros_like(pending0), pending0, loss0)
+        (acc, pending, lsum), _ = jax.lax.scan(body, init, rest)
+        # flush: the last microbatch's buckets have no backward left to hide
+        # behind — this is the exposed tail the predictor charges for
+        final = jnp.stack([reduce_bucket(pending[k])
+                           for k in range(len(buckets))])
+        reduced = acc + final
+        loss = lsum / microbatches
+        return loss, ov.unpack_buckets(reduced, buckets, flat0), tdef
 
     def local_step(params, opt_state, batch, err):
+        if overlap:
+            loss, red_flat, tdef = overlap_grads(params, batch)
+            loss = jax.lax.pmean(loss, loss_axes)
+            grads = tdef.unflatten(red_flat)
+            params, opt_state, metrics = adamw.apply_updates(params, grads,
+                                                             opt_state, opt)
+            metrics["loss"] = loss
+            return params, opt_state, metrics, err
         loss, grads = jax.value_and_grad(model.loss)(params, batch)
         loss = jax.lax.pmean(loss, loss_axes)
 
@@ -213,12 +302,19 @@ def build_explicit_dp_step(model: Model, opt: adamw.OptConfig, mesh, axis: str =
             if compress_bits == 8:
                 g32 = g32 + e
                 scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
-                q = jnp.clip(jnp.round(g32 / scale), -127, 127)
-                deq = q * scale
+                q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+                deq = q.astype(jnp.float32) * scale
                 new_e = g32 - deq
-                # wire format: int8 payload + per-tensor scale (summed after dequant)
-                summed = coll.one_shot_all_reduce(deq, axis)
+                # wire format: int8 payload + per-tensor fp32 scale, summed
+                # after dequant — the all-gather moves s/4 + 4 bytes per peer,
+                # not the 4x dequantized fp32 tensor
+                qg = jax.lax.all_gather(q, axis)          # (n, ...) int8 wire
+                sg = jax.lax.all_gather(scale, axis)      # (n,) fp32 scales
+                summed = jnp.tensordot(sg, qg.astype(jnp.float32),
+                                       axes=((0,), (0,)))
                 if dcn_axis is not None:
+                    # DCN leg stays fp32: re-quantizing the partial sum would
+                    # add error outside the error-feedback loop
                     summed = jax.lax.psum(summed, dcn_axis)
                 return summed, new_e
             return policy.all_reduce(g32, axis, n, dcn_axis=dcn_axis), e
@@ -255,16 +351,23 @@ def build_explicit_dp_step(model: Model, opt: adamw.OptConfig, mesh, axis: str =
                          check_vma=False)
 
     # remat inside the loss emits closed_call, which shard_map can't evaluate
-    # eagerly — jit around the shard_map is required.  The specs only depend on
-    # the pytree structures, which are fixed across steps, so build + jit once
-    # on first call (a fresh jit(make(...)) per step would retrace every step).
-    cache: Dict[str, Callable] = {}
+    # eagerly — jit around the shard_map is required.  The shard_map specs
+    # depend only on the pytree structures, so cache the built jit per
+    # flattened tree-structure tuple: repeat calls with the same structures
+    # reuse one jit (no per-step retrace), while a call with a different
+    # batch/params structure gets fresh specs instead of silently reusing the
+    # first call's stale shard_map specs.
+    cache: Dict[Tuple, Callable] = {}
 
     def step(params, opt_state, batch, err):
-        if "fn" not in cache:
-            cache["fn"] = jax.jit(make(params, opt_state, batch, err))
-        return cache["fn"](params, opt_state, batch, err)
+        key = tuple(jax.tree.structure(t)
+                    for t in (params, opt_state, batch, err))
+        fn = cache.get(key)
+        if fn is None:
+            fn = cache[key] = jax.jit(make(params, opt_state, batch, err))
+        return fn(params, opt_state, batch, err)
 
+    step._cache = cache  # introspectable by tests
     return step
 
 

@@ -48,6 +48,12 @@ class TrainConfig:
     dcn_axis: Optional[str] = None
     policy: Optional[object] = None       # core.autotune.CollectivePolicy
     bucket_bytes: Optional[int] = None    # None = plan crossover, 0 = per-tensor
+    # overlap-aware execution (core.overlap): reverse-layer-order buckets on a
+    # scan-carried issue schedule; with microbatches > 1 each bucket's
+    # reduction overlaps the next microbatch's backward, and on a two-level
+    # mesh buckets run the chunked hierarchical pipeline
+    overlap: bool = False
+    chunks: Optional[int] = None          # None = plan's per-tier alpha-beta fit
 
 
 class Trainer:
@@ -94,10 +100,17 @@ class Trainer:
             if ax not in (c.dp_axis, c.dcn_axis) and size > 1:
                 raise ValueError(f"explicit_dp needs a pure-DP mesh; axis {ax!r} "
                                  f"has size {size}")
+        if c.microbatches > 1 and not c.overlap:
+            raise ValueError("explicit-DP gradient accumulation is implemented "
+                             "by the overlap schedule; pass overlap=True "
+                             "(launch.train --overlap) with microbatches "
+                             f"({c.microbatches} requested)")
         self.model = build_model(self.model_cfg)
         dp_step = rsteps.build_explicit_dp_step(
             self.model, self.opt, mesh, c.dp_axis, policy=c.policy,
-            bucket_bytes=c.bucket_bytes, dcn_axis=c.dcn_axis)
+            bucket_bytes=c.bucket_bytes, dcn_axis=c.dcn_axis,
+            overlap=c.overlap, chunks=c.chunks,
+            microbatches=c.microbatches)
         self._dp_err = None
 
         def step_fn(params, opt_state, batch):

@@ -81,3 +81,40 @@ print("ALL_OK")
 @pytest.mark.slow
 def test_ring_family_non_power_of_two():
     assert "ALL_OK" in run_devices(NONPOW2, 6)
+
+
+CHUNKED = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import collectives as C  # installs repro.compat jax shims
+from repro.core.overlap import chunked_hierarchical_all_reduce
+from jax.sharding import PartitionSpec as P, AxisType
+
+mesh = jax.make_mesh((2, 4), ("pod", "ici"), axis_types=(AxisType.Auto,)*2)
+rng = np.random.RandomState(3)
+
+# integer-valued fp32: sums are exact regardless of association, so the
+# chunked pipeline must match the psum oracle bit-for-bit
+for size in (1, 7, 64, 129, 1000):
+    x = rng.randint(-64, 64, (8, size)).astype(np.float32)
+    want = np.asarray(jax.jit(jax.shard_map(
+        lambda v: jax.lax.psum(v, ("pod", "ici")), mesh=mesh,
+        in_specs=P(("pod", "ici")), out_specs=P(("pod", "ici"))))(x))
+    for n_chunks in (1, 2, 3, 5):
+        out = np.asarray(jax.jit(jax.shard_map(
+            lambda v, c=n_chunks: chunked_hierarchical_all_reduce(
+                v, "ici", "pod", n_chunks=c),
+            mesh=mesh, in_specs=P(("pod", "ici")),
+            out_specs=P(("pod", "ici"))))(x))
+        assert np.array_equal(out, want), (size, n_chunks)
+    print("ok chunked size", size)
+
+# and the registry carries it as a multi-axis all-reduce
+spec = C.get_collective("all_reduce", "hierarchical_chunked")
+assert spec.multi_axis
+print("ALL_OK")
+"""
+
+
+@pytest.mark.slow
+def test_chunked_hierarchical_pipeline_matches_psum_oracle():
+    assert "ALL_OK" in run_devices(CHUNKED, 8)

@@ -1,0 +1,342 @@
+"""Overlap engine: bucket construction, pipeline arithmetic, the exposed-comm
+predictor, and the explicit-DP overlap schedule (jaxpr ordering + numerics)."""
+import numpy as np
+import pytest
+
+from repro.core import overlap as ov
+from repro.core.commplan import CommPlan
+from repro.core.costmodel import (exposed_comm_time, make_comm_model,
+                                  pipeline_params_at_scale)
+from repro.core.scenarios import (PAPER_SYSTEMS, check_overlap_shapes,
+                                  sweep_overlap, synthetic_grad_sizes)
+from repro.core.topology import make_paper_systems, make_tpu_multipod
+
+from .helpers import run_devices
+
+
+# ------------------------------------------------------------------- buckets
+def test_buckets_reverse_layer_order():
+    """Bucket 0 must hold the *last* tensor's elements — the gradients backward
+    materializes first."""
+    buckets = ov.make_buckets([2, 3], bucket_elems=5)
+    assert len(buckets) == 1
+    assert buckets[0].spans == ((1, 0, 3), (0, 0, 2))
+    fwd = ov.make_buckets([2, 3], bucket_elems=5, reverse=False)
+    assert fwd[0].spans == ((0, 0, 2), (1, 0, 3))
+
+
+def test_buckets_smaller_than_one_element():
+    """bucket_bytes below one element clamps to one element per bucket instead
+    of looping or emitting empty buckets."""
+    buckets = ov.make_buckets([3], bucket_elems=0)
+    assert len(buckets) == 3
+    assert all(b.n_elems == 1 for b in buckets)
+
+
+def test_buckets_single_tensor_tree():
+    buckets = ov.make_buckets([10], bucket_elems=4)
+    assert [b.n_elems for b in buckets] == [4, 4, 2]
+    # spans of one tensor, contiguous and covering all 10 elements
+    covered = sorted((lo, hi) for b in buckets for i, lo, hi in b.spans)
+    assert covered == [(0, 4), (4, 8), (8, 10)]
+
+
+def test_buckets_boundary_exactly_at_tensor_edge():
+    """A tensor ending exactly at a bucket boundary must not leak a zero-width
+    span into the next bucket."""
+    buckets = ov.make_buckets([4, 4], bucket_elems=4)
+    assert len(buckets) == 2
+    assert buckets[0].spans == ((1, 0, 4),)
+    assert buckets[1].spans == ((0, 0, 4),)
+    assert all(lo < hi for b in buckets for _, lo, hi in b.spans)
+
+
+def test_zero_size_leaf_roundtrip():
+    """A zero-size gradient leaf owns no span; unpack must return fp32 zeros
+    of its shape instead of crashing (regression)."""
+    import jax.numpy as jnp
+
+    flat_g = [jnp.ones((2, 2), jnp.float32), jnp.zeros((0,), jnp.float32),
+              jnp.full((3,), 2.0, jnp.float32)]
+    buckets = ov.make_buckets([g.size for g in flat_g], bucket_elems=4)
+    assert all(lo < hi for b in buckets for _, lo, hi in b.spans)
+    back = ov.unpack_buckets(ov.pack_buckets(flat_g, buckets), buckets, flat_g)
+    assert back[1].shape == (0,) and back[1].dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(back[0]), np.ones((2, 2)))
+    np.testing.assert_allclose(np.asarray(back[2]), 2.0 * np.ones(3))
+
+
+def test_pack_unpack_roundtrip():
+    import jax.numpy as jnp
+
+    rng = np.random.RandomState(0)
+    flat_g = [jnp.asarray(rng.randn(*s).astype(np.float32))
+              for s in [(3, 2), (5,), (1,)]]
+    buckets = ov.make_buckets([g.size for g in flat_g], bucket_elems=4)
+    stacked = ov.pack_buckets(flat_g, buckets, scale=2.0)
+    assert stacked.shape == (len(buckets), 4)
+    back = ov.unpack_buckets(stacked, buckets, flat_g)
+    for g, b in zip(flat_g, back):
+        np.testing.assert_allclose(np.asarray(b), 2.0 * np.asarray(g), rtol=1e-6)
+
+
+# --------------------------------------------------------- pipeline schedule
+def test_pipeline_time_unimodal_in_chunks():
+    """More chunks shrink the fill until the per-chunk alphas dominate."""
+    model = make_comm_model("leonardo")
+    params = pipeline_params_at_scale(model, 4096)
+    depths = [1, 2, 4, 8, 16, 32]
+    times = [ov.pipeline_time(64 << 20, c, params) for c in depths]
+    best = times.index(min(times))
+    assert best > 0, "pipelining a 64 MiB bucket must beat store-and-forward"
+    assert all(b <= a * (1 + 1e-9) for a, b in zip(times[:best + 1], times[1:best + 1]))
+    assert all(b >= a * (1 - 1e-9) for a, b in zip(times[best:], times[best + 1:]))
+
+
+def test_choose_chunks_alpha_dominated_payload_unchunked():
+    model = make_comm_model("leonardo")
+    params = pipeline_params_at_scale(model, 4096)
+    assert ov.choose_chunks(256.0, params) == 1
+    assert ov.choose_chunks(64 << 20, params) > 1
+
+
+def test_bucket_schedule_serial_chain_and_readiness():
+    tl = ov.bucket_schedule(compute_time=1.0, bucket_bytes=[1, 1, 1, 1],
+                            bucket_comm_s=[0.5, 0.5, 0.5, 0.5])
+    # bucket 0 ready a quarter of the way through backward
+    assert tl[0].ready_s == pytest.approx(0.25)
+    assert tl[0].start_s == pytest.approx(0.25)
+    # serial stream: each next bucket waits for the wire
+    for a, b in zip(tl, tl[1:]):
+        assert b.start_s == pytest.approx(max(b.ready_s, a.end_s))
+    assert tl[-1].end_s == pytest.approx(0.25 + 4 * 0.5)
+
+
+# ---------------------------------------------------------------- predictor
+def test_exposed_comm_time_hidden_grows_with_compute():
+    plan = CommPlan.from_topology(make_paper_systems()["leonardo"])
+    model = make_comm_model("leonardo")
+    sizes = synthetic_grad_sizes(256 << 20)
+    ests = [exposed_comm_time(t, plan, sizes, n_endpoints=512, model=model)
+            for t in (0.0, 0.01, 0.1, 1.0)]
+    hf = [e.hidden_fraction for e in ests]
+    assert hf == sorted(hf)
+    assert ests[0].exposed_s == pytest.approx(ests[0].total_comm_s)
+    for e in ests:
+        assert 0.0 <= e.exposed_s <= e.total_comm_s * (1 + 1e-9)
+        assert e.step_s == pytest.approx(max(e.compute_s, e.compute_s + e.exposed_s))
+
+
+def test_exposed_comm_time_empty_sizes():
+    plan = CommPlan.from_topology(make_paper_systems()["alps"])
+    est = exposed_comm_time(1.0, plan, [], n_endpoints=64)
+    assert est.total_comm_s == 0.0 and est.exposed_s == 0.0
+    assert est.step_s == 1.0
+
+
+def test_overlap_shape_checks_all_paper_systems():
+    for system in PAPER_SYSTEMS:
+        checks = check_overlap_shapes(system)
+        bad = [k for k, okv in checks.items() if not okv]
+        assert not bad, f"{system}: {bad}"
+
+
+def test_sweep_overlap_points_structured():
+    pts = sweep_overlap("lumi", (8, 512), compute_intensity=1.0)
+    assert [p.n_endpoints for p in pts] == [8, 512]
+    for p in pts:
+        assert 0.0 < p.hidden_fraction <= 1.0
+        assert p.compute_s == pytest.approx(p.total_comm_s)
+
+
+def test_plan_pipeline_persistence_and_chunks():
+    """The per-tier pipeline constants survive the JSON round-trip and feed
+    pipeline_chunks."""
+    plan = CommPlan.from_topology(make_tpu_multipod())
+    assert plan.hierarchical and plan.pipeline
+    back = CommPlan.from_blob(plan.to_blob())
+    assert back.pipeline == plan.pipeline
+    assert back.pipeline_chunks(plan.bucket_bytes) == \
+        plan.pipeline_chunks(plan.bucket_bytes)
+    assert plan.pipeline_chunks(plan.bucket_bytes) >= 1
+    # single-level plans never pipeline
+    flat = CommPlan.from_topology(make_paper_systems()["lumi"].intra)
+    assert flat.pipeline_chunks(64 << 20) == 1
+
+
+def test_overlap_rejects_per_tensor_bucketing():
+    """overlap=True with an explicit bucket_bytes=0 (documented per-tensor
+    mode) must refuse, not silently re-bucket."""
+    import jax
+    import repro.compat  # noqa: F401
+    from jax.sharding import AxisType
+    from repro.optim import adamw
+    from repro.runtime import steps as rsteps
+
+    mesh = jax.make_mesh((1,), ("data",), axis_types=(AxisType.Auto,))
+    with pytest.raises(ValueError, match="per-tensor"):
+        rsteps.build_explicit_dp_step(object(), adamw.OptConfig(), mesh,
+                                      "data", overlap=True, bucket_bytes=0)
+
+
+# ------------------------------------------------------- runtime (multi-dev)
+OVERLAP_STEP = r"""
+import jax, jax.numpy as jnp, numpy as np
+import repro.compat  # jax API shims before touching jax.sharding
+from jax.sharding import AxisType
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.core import overlap as ov
+from repro.models import build_model
+from repro.optim import adamw
+from repro.runtime import steps as rsteps
+
+COLL = {"ppermute", "psum", "all_gather", "all_to_all", "psum_scatter"}
+
+def walk(jaxpr, fn):
+    for eqn in jaxpr.eqns:
+        fn(eqn)
+        for v in eqn.params.values():
+            vals = v if isinstance(v, (tuple, list)) else (v,)
+            for u in vals:
+                if isinstance(u, jax.core.ClosedJaxpr):
+                    walk(u.jaxpr, fn)
+                elif isinstance(u, jax.core.Jaxpr):
+                    walk(u, fn)
+
+def prims_of(closed):
+    names = set()
+    walk(closed.jaxpr if hasattr(closed, "jaxpr") else closed,
+         lambda e: names.add(e.primitive.name))
+    return names
+
+def scans_of(closed):
+    found = []
+    def visit(eqn):
+        if eqn.primitive.name == "scan":
+            found.append((eqn.params["length"], prims_of(eqn.params["jaxpr"])))
+    walk(closed.jaxpr, visit)
+    return found
+
+cfg = get_config("smollm-135m").reduced()
+shape = ShapeConfig("t", 32, 8, "train")
+mesh = jax.make_mesh((4,), ("data",), axis_types=(AxisType.Auto,))
+model = build_model(cfg)
+opt = adamw.OptConfig(peak_lr=1e-3, warmup_steps=1, decay_steps=20)
+params = model.init(jax.random.PRNGKey(0))
+ostate = adamw.init_opt_state(params)
+batch = model.make_batch(shape)
+err = rsteps.init_error_state(params)
+
+base = rsteps.build_explicit_dp_step(model, opt, mesh, "data")
+bp, bo, bm, _ = base(params, ostate, batch, err)
+
+# --- overlap mb=1: scan-carried issue schedule over reverse-order buckets ---
+bb = 1 << 20
+n_buckets = len(ov.make_buckets(
+    [p.size for p in jax.tree.leaves(params)], bb // 4))
+step1 = rsteps.build_explicit_dp_step(model, opt, mesh, "data",
+                                      overlap=True, bucket_bytes=bb)
+jx1 = jax.make_jaxpr(lambda p, o, b, e: step1(p, o, b, e))(
+    params, ostate, batch, err)
+scans = scans_of(jx1)
+bucket_scans = [(ln, ps) for ln, ps in scans if ps & COLL]
+assert bucket_scans, f"no scan carries collectives: {scans}"
+assert any(ln == n_buckets for ln, ps in bucket_scans), \
+    f"no per-bucket issue scan of length {n_buckets}: {[ln for ln, _ in scans]}"
+# the issue scan is comm-only: reductions are separated from the backward blob
+assert any(ln == n_buckets and "dot_general" not in ps
+           for ln, ps in bucket_scans)
+op, oo, om, _ = step1(params, ostate, batch, err)
+d = max(float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+        for a, b in zip(jax.tree.leaves(bp), jax.tree.leaves(op)))
+print("overlap mb=1 delta:", d)
+assert d < 5e-2
+print("ok mb1")
+
+# --- overlap mb=2: bucket reductions issued inside the same scan step as the
+# next microbatch's backward (interleaved, not post-hoc) ---
+step2 = rsteps.build_explicit_dp_step(model, opt, mesh, "data",
+                                      overlap=True, bucket_bytes=bb,
+                                      microbatches=2)
+jx2 = jax.make_jaxpr(lambda p, o, b, e: step2(p, o, b, e))(
+    params, ostate, batch, err)
+inter = [(ln, ps) for ln, ps in scans_of(jx2)
+         if (ps & COLL) and "dot_general" in ps]
+assert inter, "no scan interleaves collectives with backward matmuls"
+op2, _, om2, _ = step2(params, ostate, batch, err)
+d2 = max(float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+         for a, b in zip(jax.tree.leaves(bp), jax.tree.leaves(op2)))
+print("overlap mb=2 delta:", d2)
+assert d2 < 5e-2
+print("ok mb2")
+
+# --- two-level mesh: buckets run the chunked hierarchical pipeline ---
+mesh2 = jax.make_mesh((2, 2), ("pod", "data"), axis_types=(AxisType.Auto,)*2)
+steph = rsteps.build_explicit_dp_step(model, opt, mesh2, "data",
+                                      dcn_axis="pod", overlap=True,
+                                      bucket_bytes=bb, chunks=3)
+hp, _, hm, _ = steph(params, ostate, batch, err)
+dh = max(float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+         for a, b in zip(jax.tree.leaves(bp), jax.tree.leaves(hp)))
+print("hier chunked delta:", dh)
+assert dh < 5e-2
+print("ALL_OK")
+"""
+
+
+@pytest.mark.slow
+def test_overlap_step_schedule_and_numerics():
+    assert "ALL_OK" in run_devices(OVERLAP_STEP, 4, timeout=560)
+
+
+INT8_WIRE = r"""
+import jax, jax.numpy as jnp, re
+import repro.compat
+from jax.sharding import AxisType
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.models import build_model
+from repro.optim import adamw
+from repro.runtime import steps as rsteps
+
+cfg = get_config("smollm-135m").reduced()
+shape = ShapeConfig("t", 32, 8, "train")
+mesh = jax.make_mesh((4,), ("data",), axis_types=(AxisType.Auto,))
+model = build_model(cfg)
+opt = adamw.OptConfig()
+params = model.init(jax.random.PRNGKey(0))
+ostate = adamw.init_opt_state(params)
+batch = model.make_batch(shape)
+err = rsteps.init_error_state(params)
+
+step = rsteps.build_explicit_dp_step(model, opt, mesh, "data", compress_bits=8)
+txt = str(jax.make_jaxpr(lambda p, o, b, e: step(p, o, b, e))(
+    params, ostate, batch, err))
+n_leaves = len(jax.tree.leaves(params))
+i8 = re.findall(r"i8\[[^\]]*\] = all_gather", txt)
+# per-tensor fp32 scale gathers are scalars -> f32[4] after gather; the bug
+# was a *tensor-sized* fp32 payload on the wire (all_gather of the dequant)
+big_f32 = re.findall(r"f32\[\d{3,}[^\]]*\] = all_gather", txt)
+assert len(i8) == n_leaves, (len(i8), n_leaves)
+assert not big_f32, big_f32
+
+# wire accounting: int8 payload + one fp32 scale per tensor, per peer
+sizes = [p.size for p in jax.tree.leaves(params)]
+wire = sum(s + 4 for s in sizes)
+fp32_wire = sum(4 * s for s in sizes)
+assert wire < fp32_wire / 3.9, (wire, fp32_wire)
+
+# numerics: compression still trains (finite loss, params move)
+cp, co, cm, ce = step(params, ostate, batch, err)
+assert jnp.isfinite(cm["loss"])
+moved = max(float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+            for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(cp)))
+assert moved > 0
+print("ALL_OK")
+"""
+
+
+@pytest.mark.slow
+def test_int8_compression_wire_bytes():
+    assert "ALL_OK" in run_devices(INT8_WIRE, 4, timeout=560)

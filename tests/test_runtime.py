@@ -148,6 +148,56 @@ def test_serve_greedy_deterministic():
     assert a.shape == (2, 4)
 
 
+def test_microbatch_indivisible_raises_named_error():
+    """An indivisible microbatch split must name the batch size and count
+    instead of surfacing an opaque reshape error."""
+    from repro.runtime import steps as rsteps
+
+    batch = {"tokens": np.zeros((10, 4), np.int32)}
+    with pytest.raises(ValueError, match=r"10.*microbatches=3"):
+        rsteps._microbatch(batch, 3)
+    # divisible split unchanged
+    out = rsteps._microbatch(batch, 2)
+    assert out["tokens"].shape == (2, 5, 4)
+
+
+def test_explicit_dp_jit_cache_keyed_on_tree_structure():
+    """The jitted shard_map step must not reuse the first call's specs for a
+    call with a different pytree structure (stale-spec regression)."""
+    import jax
+    import repro.compat  # noqa: F401  (AxisType shim)
+    from jax.sharding import AxisType
+    from repro.runtime import steps as rsteps
+
+    class ToyModel:
+        @staticmethod
+        def loss(params, batch):
+            s = sum(jnp.sum(p) for p in jax.tree.leaves(params))
+            return (s - 1.0) ** 2 + 0.0 * jnp.mean(batch["x"])
+
+    mesh = jax.make_mesh((1,), ("data",), axis_types=(AxisType.Auto,))
+    opt = adamw.OptConfig(peak_lr=1e-2, warmup_steps=0, decay_steps=10)
+    step = rsteps.build_explicit_dp_step(ToyModel(), opt, mesh, "data")
+
+    p1 = {"w": jnp.ones((4,), jnp.float32)}
+    b1 = {"x": jnp.ones((2,), jnp.float32)}
+    out1 = step(p1, adamw.init_opt_state(p1), b1, rsteps.init_error_state(p1))
+    assert np.isfinite(float(out1[2]["loss"]))
+    assert len(step._cache) == 1
+
+    # a different params structure must get fresh shard_map specs
+    p2 = {"w": jnp.ones((4,), jnp.float32), "v": jnp.ones((3,), jnp.float32)}
+    out2 = step(p2, adamw.init_opt_state(p2), b2 := {"x": jnp.ones((2,), jnp.float32)},
+                rsteps.init_error_state(p2))
+    assert np.isfinite(float(out2[2]["loss"]))
+    assert set(out2[0]) == {"w", "v"}
+    assert len(step._cache) == 2
+
+    # repeat calls reuse the cached jit (no per-step retrace)
+    step(p1, adamw.init_opt_state(p1), b1, rsteps.init_error_state(p1))
+    assert len(step._cache) == 2
+
+
 def test_gradient_compression_error_feedback():
     """int8 error-feedback quantization: accumulated error stays bounded and the
     running sum of dequantized grads tracks the true sum (convergence guarantee)."""
