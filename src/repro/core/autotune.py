@@ -75,6 +75,12 @@ class CollectivePolicy:
         single-level plans)."""
         return self._as_plan().pipeline_chunks(nbytes)
 
+    @property
+    def wire(self):
+        """Per-tier wire formats (`wire.WireSpec`) the plan chose from its
+        alpha-beta fits — fp32 everywhere for legacy table-only policies."""
+        return self._as_plan().wire_spec()
+
     def all_reduce(self, x: jnp.ndarray, axis: str, axis_size: int,
                    dcn_axis: Optional[str] = None) -> jnp.ndarray:
         """Trace-time dispatch (sizes are static under jit)."""

@@ -210,6 +210,11 @@ class CommPlan:
     # alpha_ici, bw_ici, alpha_dcn, bw_dcn) — feeds `pipeline_chunks` and the
     # overlap predictor; empty for single-level plans.
     pipeline: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # per-tier gradient wire formats ({"intra": ..., "inter": ...}, see
+    # core.wire): chosen from the same alpha-beta fits as `pipeline` — compress
+    # where bandwidth-bound, fp32 where alpha-bound.  Empty = fp32 everywhere
+    # (legacy plans).
+    wire: Dict[str, str] = dataclasses.field(default_factory=dict)
     stats: Dict[str, int] = dataclasses.field(default_factory=dict, compare=False)
 
     # ------------------------------------------------------------- builders
@@ -278,6 +283,7 @@ class CommPlan:
                    else bw.allreduce) * effs["all_reduce"][0]
         bucket = _bucket_from_crossover(a_exp, 2 * LOG2(n_full), slowest)
         pipeline: Dict[str, float] = {}
+        wire_fmt: Dict[str, str] = {}
         if two_level:
             # per-tier alpha-beta for the chunked hierarchical pipeline: the
             # intra phases run at the graph's allreduce bound, the inter phase
@@ -294,6 +300,20 @@ class CommPlan:
                 "bw_dcn": min(profile.nic_bw, fabric.tier_bw(tier))
                           * effs["all_reduce"][0],
             }
+        # wire-format decision from the same (possibly calibrated) alpha-beta
+        # constants, evaluated at the plan's own bucket size
+        from . import overlap as _ov
+        from . import wire as _wire
+        if two_level:
+            wire_fmt = _wire.choose_wire(
+                _ov.PipelineParams(int(pipeline["n_ici"]),
+                                   pipeline["alpha_ici"], pipeline["bw_ici"],
+                                   pipeline["alpha_dcn"], pipeline["bw_dcn"]),
+                float(bucket)).to_dict()
+        else:
+            wire_fmt = _wire.choose_wire_single(
+                a_exp, bw.allreduce * effs["all_reduce"][0], graph.n,
+                float(bucket)).to_dict()
         meta = {"source": "commplan", "topology": graph.name,
                 "profile": profile.name, "n_endpoints": str(topo.n)}
         if two_level:
@@ -305,7 +325,7 @@ class CommPlan:
                                    f"{getattr(calibration, 'system', '?')}/"
                                    f"n{getattr(calibration, 'n_endpoints', '?')}")
         return cls(ar, a2a, rs, ag, bucket_bytes=bucket, hierarchical=two_level,
-                   meta=meta, tiers=tiers, pipeline=pipeline)
+                   meta=meta, tiers=tiers, pipeline=pipeline, wire=wire_fmt)
 
     # -------------------------------------------------------------- lookups
     @staticmethod
@@ -348,6 +368,12 @@ class CommPlan:
         p = self.pipeline
         return overlap.PipelineParams(int(p["n_ici"]), p["alpha_ici"],
                                       p["bw_ici"], p["alpha_dcn"], p["bw_dcn"])
+
+    def wire_spec(self):
+        """The plan's per-tier wire formats as a `wire.WireSpec` (fp32
+        everywhere for legacy plans with no persisted decision)."""
+        from .wire import WireSpec
+        return WireSpec.from_dict(self.wire)
 
     def pipeline_chunks(self, nbytes: int) -> int:
         """Chunk count for the double-buffered hierarchical pipeline on an
@@ -431,6 +457,7 @@ class CommPlan:
             "hierarchical": self.hierarchical,
             "tiers": {str(n): t for n, t in self.tiers.items()},
             "pipeline": dict(self.pipeline),
+            "wire": dict(self.wire),
         }
 
     @classmethod
@@ -448,6 +475,7 @@ class CommPlan:
             meta=dict(blob.get("meta", {})),
             tiers={int(n): str(t) for n, t in blob.get("tiers", {}).items()},
             pipeline={k: float(v) for k, v in blob.get("pipeline", {}).items()},
+            wire={k: str(v) for k, v in blob.get("wire", {}).items()},
         )
 
     def save(self, path: str) -> None:

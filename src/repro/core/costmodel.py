@@ -221,6 +221,12 @@ class CommModel:
                         n: Optional[int] = None) -> CollectiveCost:
         n = n or self.graph.n
         a = self._alpha(mechanism, False)
+        if mechanism == "staging":
+            # store-and-forward through the host: the algorithm dispatch below
+            # is irrelevant (and used to be computed then discarded) — return
+            # the staging formula before consulting it
+            t = a + 2 * n * s / (self.profile.host_staging_bw * 0.9)
+            return CollectiveCost(t, 2 * s * (n - 1) / n)
         eff = self._eff_coll_ar.get(mechanism, 0.5)
         peak = self.graph.allreduce_expected_goodput() * eff
         floor = CCL_SMALL_FLOOR if mechanism == "ccl" else 0.0
@@ -237,8 +243,6 @@ class CommModel:
             t = a + (n - 1) * s / (self.graph.injection_bw(0) * eff)
         else:
             raise ValueError(algorithm)
-        if mechanism == "staging":
-            t = a + 2 * n * s / (self.profile.host_staging_bw * 0.9)
         t = max(t, floor)
         return CollectiveCost(t, 2 * s * (n - 1) / n)
 
@@ -311,6 +315,7 @@ class OverlapEstimate:
     hidden_fraction: float   # 1 - exposed/total (0 = fully exposed blob)
     n_buckets: int
     chunks: int              # hierarchical pipeline depth used
+    wire: str = "fp32/fp32"  # intra/inter wire formats the estimate priced
 
 
 def pipeline_params_at_scale(model: CommModel, n_endpoints: int,
@@ -334,7 +339,8 @@ def exposed_comm_time(compute_time: float, plan, sizes,
                       n_endpoints: Optional[int] = None,
                       model: Optional[CommModel] = None,
                       chunks: Optional[int] = None,
-                      mechanism: str = "ccl") -> OverlapEstimate:
+                      mechanism: str = "ccl",
+                      wire=None) -> OverlapEstimate:
     """Overlap-aware step-time predictor for the explicit-DP gradient path.
 
     `sizes` are the per-tensor gradient byte counts in forward layer order;
@@ -345,9 +351,27 @@ def exposed_comm_time(compute_time: float, plan, sizes,
     — exposed time is whatever drains past the end of backward.  Beyond the
     node/pod boundary each bucket pays the chunked hierarchical pipeline time
     (`overlap.pipeline_time`); inside it, the intra-node collective model.
-    """
-    from . import overlap as ov
 
+    `wire` prices compression (core.wire): None keeps the fp32 wire (the
+    uncompressed runtime default), ``"plan"`` takes the plan's persisted
+    per-tier wire decision, or pass a `wire.WireSpec` / ``{"intra": ...,
+    "inter": ...}`` dict directly.  The intra tier is priced at the *realized*
+    wire cost (`wire.realized_multiplier`: int8 is the gather wire, n/8 of the
+    fp32 allreduce bytes, not the idealized 0.25); the inter tier keeps the
+    idealized format ratio — the runtime's inter leg stays fp32 today, so the
+    inter figure is the planning bound, reported by dryrun next to the fp32
+    realization.  Alpha terms stay put either way.
+    """
+    import dataclasses as _dc
+
+    from . import overlap as ov
+    from .wire import WireSpec, realized_multiplier
+
+    if wire == "plan":
+        wire = plan.wire_spec() if hasattr(plan, "wire_spec") else None
+    elif isinstance(wire, dict):
+        wire = WireSpec.from_dict(wire)
+    wire = wire or WireSpec()
     model_given = model is not None
     model = model or make_comm_model(
         plan.meta.get("profile", "tpu_v5e") if plan.meta.get("profile")
@@ -355,12 +379,19 @@ def exposed_comm_time(compute_time: float, plan, sizes,
     if n_endpoints is None:
         n_endpoints = int(plan.meta.get("n_endpoints", 0) or 0) or model.graph.n
     sizes = [int(s) for s in sizes if int(s) > 0]
+    wire_str = f"{wire.intra}/{wire.inter}"
     if not sizes:
-        return OverlapEstimate(compute_time, 0.0, 0.0, compute_time, 1.0, 0, 1)
+        return OverlapEstimate(compute_time, 0.0, 0.0, compute_time, 1.0, 0, 1,
+                               wire_str)
     bucket_cap = max(int(plan.bucket_bytes), 1)
     buckets = ov.make_buckets(sizes, bucket_cap)  # byte-granular, reverse order
     b_bytes = [float(b.n_elems) for b in buckets]
     nn = model.profile.endpoints_per_node
+    # full buckets all share one byte count: evaluate the per-bucket comm model
+    # once per *unique* size instead of once per bucket (a 1 GiB gradient at a
+    # 4 MiB bucket is ~256 identical evaluations otherwise — measurable at
+    # 4096-endpoint sweep granularity)
+    uniq = sorted(set(b_bytes))
     if n_endpoints > nn:
         # without an explicit model, a hierarchical plan's persisted per-tier
         # fits (calibrated when the plan was) drive the prediction — the same
@@ -371,34 +402,60 @@ def exposed_comm_time(compute_time: float, plan, sizes,
             params = plan.pipeline_params()
         if params is None:
             params = pipeline_params_at_scale(model, n_endpoints, mechanism)
+        params = _dc.replace(
+            params,
+            wire_intra=realized_multiplier(wire.intra, params.n_ici),
+            wire_inter=wire.multiplier("inter"))
         c = chunks if chunks is not None else ov.choose_chunks(bucket_cap, params)
         c = max(int(c), 1)
-        comm = [ov.pipeline_time(b, c, params) for b in b_bytes]
+        comm_by_size = {b: ov.pipeline_time(b, c, params) for b in uniq}
     else:
         c = 1
-        comm = [model.allreduce_intra(b, mechanism,
-                                      n=min(n_endpoints, model.graph.n)).seconds
-                for b in b_bytes]
+        n_tier = min(n_endpoints, model.graph.n)
+        m_intra = realized_multiplier(wire.intra, n_tier)
+        comm_by_size = {
+            b: model.allreduce_intra(b * m_intra, mechanism, n=n_tier).seconds
+            for b in uniq}
+    comm = [comm_by_size[b] for b in b_bytes]
     timeline = ov.bucket_schedule(compute_time, b_bytes, comm)
     total_comm = sum(comm)
     step = max(compute_time, timeline[-1].end_s)
     exposed = step - compute_time
     hidden = 1.0 - exposed / total_comm if total_comm > 0 else 1.0
     return OverlapEstimate(compute_time, total_comm, exposed, step,
-                           min(max(hidden, 0.0), 1.0), len(buckets), c)
+                           min(max(hidden, 0.0), 1.0), len(buckets), c,
+                           wire_str)
+
+
+# Memoized system models: the scenario sweeps (`at_scale_suite`,
+# `check_paper_shapes`, `sweep_overlap`) used to rebuild the fabric + model per
+# call inside their loops.  Models are immutable after construction, so one
+# instance per (system, calibration identity) is shared.  The cache entry
+# holds a strong reference to the calibration object, which keeps its id()
+# from being recycled while the entry is alive; the identity check guards the
+# (theoretical) mismatch anyway.
+_MODEL_CACHE: Dict[tuple, CommModel] = {}
 
 
 def make_comm_model(system: str = "tpu_v5e", calibration: Optional[object] = None) -> CommModel:
     from .topology import (make_paper_fabrics, make_paper_node_graphs,
                            make_tpu_pod, make_tpu_multipod)
 
+    key = (system, id(calibration) if calibration is not None else None)
+    hit = _MODEL_CACHE.get(key)
+    if hit is not None and hit.calibration is calibration:
+        return hit
     prof = hw.SYSTEMS[system]
     if system == "tpu_v5e":
-        return CommModel(prof, make_tpu_pod(), make_tpu_multipod(),
-                         calibration=calibration,
-                         fabric=make_paper_fabrics()[system])
-    return CommModel(prof, make_paper_node_graphs()[system], calibration=calibration,
-                     fabric=make_paper_fabrics()[system])
+        model = CommModel(prof, make_tpu_pod(), make_tpu_multipod(),
+                          calibration=calibration,
+                          fabric=make_paper_fabrics()[system])
+    else:
+        model = CommModel(prof, make_paper_node_graphs()[system],
+                          calibration=calibration,
+                          fabric=make_paper_fabrics()[system])
+    _MODEL_CACHE[key] = model
+    return model
 
 
 def crossover_bytes(model: CommModel, n: int, mech_a: str = "ccl", mech_b: str = "mpi",

@@ -201,6 +201,47 @@ def chunked_hierarchical_all_reduce(x: jnp.ndarray, ici_axis: str, dcn_axis: str
     return out[: x.size].reshape(x.shape).astype(x.dtype)
 
 
+def quantized_all_reduce(q: jnp.ndarray, scale: jnp.ndarray, ici_axis: str,
+                         dcn_axis: Optional[str] = None,
+                         n_chunks: int = 1) -> jnp.ndarray:
+    """Wire-compressed all-reduce of one int8 bucket row (+ its fp32 scale).
+
+    Intra tier: all-gather the int8 payload and the per-peer scales, then
+    dequantize-and-sum locally — the wire moves s/4 + 4 bytes per peer instead
+    of the 4x fp32 row.  The inter (DCN) leg stays fp32: requantizing partial
+    sums would add error outside the error-feedback loop (the packing kernel
+    only tracks the *local* quantization residual).
+
+    With `n_chunks > 1` on a two-level mesh, the row is chunked and the intra
+    gather of chunk t is issued concurrently with the inter psum of chunk t-1
+    — the int8 analog of `chunked_hierarchical_all_reduce`'s double buffering
+    (two stages instead of three: gather-sum feeds psum).  Numerically
+    identical to the unchunked path (pure re-chunking of the same sums).
+    """
+    sg = lax.all_gather(scale, ici_axis)                  # (n,) fp32 scales
+    n_chunks = max(int(n_chunks), 1) if dcn_axis is not None else 1
+    flat = q.reshape(-1)
+    chunk_elems = -(-flat.shape[0] // n_chunks)
+    pad = n_chunks * chunk_elems - flat.shape[0]
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    chunks = flat.reshape(n_chunks, chunk_elems)
+    deq: List[Optional[jnp.ndarray]] = [None] * n_chunks
+    ar: List[Optional[jnp.ndarray]] = [None] * n_chunks
+    for t in range(n_chunks + 1):
+        # oldest-first within a stage: keep the inter tier draining while the
+        # intra tier gathers the next chunk (the two issues are independent)
+        if 0 <= t - 1 < n_chunks and dcn_axis is not None:
+            ar[t - 1] = lax.psum(deq[t - 1], dcn_axis)
+        if t < n_chunks:
+            qg = lax.all_gather(chunks[t], ici_axis)      # (n, chunk) int8
+            deq[t] = jnp.tensordot(sg, qg.astype(jnp.float32),
+                                   axes=((0,), (0,)))
+    rows = ar if dcn_axis is not None else deq
+    out = jnp.concatenate(rows) if n_chunks > 1 else rows[0]
+    return out[: q.size].reshape(q.shape)
+
+
 # ------------------------------------------------------- closed-form schedule
 @dataclasses.dataclass(frozen=True)
 class PipelineParams:
@@ -212,14 +253,20 @@ class PipelineParams:
     bw_ici: float       # intra-tier effective bytes/s (allreduce-phase bound)
     alpha_dcn: float
     bw_dcn: float       # inter-tier effective bytes/s per endpoint
+    # bytes-on-wire multipliers vs fp32 per tier (core.wire: 0.25 for int8):
+    # the wire-format plan shrinks the bandwidth term of the tiers it
+    # compresses while the alpha terms stay put
+    wire_intra: float = 1.0
+    wire_inter: float = 1.0
 
     def stage_times(self, chunk_bytes: float) -> Tuple[float, float, float]:
         """(reduce-scatter, inter all-reduce, all-gather) seconds per chunk."""
         n = max(self.n_ici, 2)
         frac = (n - 1) / n
-        t_rs = (n - 1) * self.alpha_ici + chunk_bytes * frac / self.bw_ici
+        t_rs = (n - 1) * self.alpha_ici \
+            + chunk_bytes * self.wire_intra * frac / self.bw_ici
         t_ag = t_rs
-        t_ar = self.alpha_dcn + (chunk_bytes / n) / self.bw_dcn
+        t_ar = self.alpha_dcn + (chunk_bytes * self.wire_inter / n) / self.bw_dcn
         return t_rs, t_ar, t_ag
 
 

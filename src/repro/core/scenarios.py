@@ -198,6 +198,26 @@ class OverlapPoint:
     total_comm_s: float
     exposed_s: float
     hidden_fraction: float
+    wire: str = "fp32/fp32"   # intra/inter wire formats the point priced
+
+
+# plan per topology: topologies are memoized singletons (core.topology), so
+# identity is a stable key.  Entries hold a strong reference to the topology
+# (keeps its id() from being recycled) and verify identity on hit, so a
+# caller-supplied transient topology can never collide with a cached one.
+_PLAN_CACHE: Dict[int, tuple] = {}
+
+
+def plan_for(topo):
+    """The (cached) CommPlan for a topology (shared across sweep loops)."""
+    from .commplan import CommPlan
+
+    hit = _PLAN_CACHE.get(id(topo))
+    if hit is not None and hit[0] is topo:
+        return hit[1]
+    plan = CommPlan.from_topology(topo)
+    _PLAN_CACHE[id(topo)] = (topo, plan)
+    return plan
 
 
 def sweep_overlap(system: str,
@@ -207,31 +227,33 @@ def sweep_overlap(system: str,
                   bucket_bytes: Optional[int] = None,
                   chunks: Optional[int] = None,
                   mechanism: str = "ccl",
-                  model: Optional[CommModel] = None) -> List[OverlapPoint]:
+                  model: Optional[CommModel] = None,
+                  wire=None) -> List[OverlapPoint]:
     """Fraction of gradient-reduction time hidden behind backward compute vs
     endpoint count (Sec. VI: the overlap win the measured fabrics leave on the
     table).  `compute_intensity` scales the backward time relative to the
     *unhidden* comm time at each scale: 1.0 means backward exactly as long as
     the full reduction, >1 compute-bound, <1 comm-bound.  `bucket_bytes` /
-    `chunks` override the plan's own choices to sweep the schedule knobs."""
-    from .commplan import CommPlan
-
+    `chunks` override the plan's own choices to sweep the schedule knobs.
+    `wire` prices compression: None = fp32 wire, ``"plan"`` = the plan's
+    per-tier wire decision, or an explicit `wire.WireSpec`."""
     model = model or make_comm_model(system)
     topo = make_paper_systems()[system]
-    plan = CommPlan.from_topology(topo)
+    plan = plan_for(topo)
     if bucket_bytes:
         plan = dataclasses.replace(plan, bucket_bytes=int(bucket_bytes))
     sizes = synthetic_grad_sizes(grad_bytes)
     points: List[OverlapPoint] = []
     for n in endpoints:
         base = exposed_comm_time(0.0, plan, sizes, n_endpoints=n, model=model,
-                                 chunks=chunks, mechanism=mechanism)
+                                 chunks=chunks, mechanism=mechanism, wire=wire)
         compute_s = compute_intensity * base.total_comm_s
         est = exposed_comm_time(compute_s, plan, sizes, n_endpoints=n,
-                                model=model, chunks=chunks, mechanism=mechanism)
+                                model=model, chunks=chunks, mechanism=mechanism,
+                                wire=wire)
         points.append(OverlapPoint(system, n, plan.bucket_bytes, est.chunks,
                                    compute_s, est.total_comm_s, est.exposed_s,
-                                   est.hidden_fraction))
+                                   est.hidden_fraction, est.wire))
     return points
 
 
@@ -241,7 +263,6 @@ def check_overlap_shapes(system: str,
     """Qualitative shape checks tying `exposed_comm_time` to the paper's
     overlap story — the acceptance oracles for the overlap engine."""
     from .overlap import pipeline_time
-    from .commplan import CommPlan
 
     model = make_comm_model(system)
     n_big = endpoints[-1]
@@ -259,7 +280,7 @@ def check_overlap_shapes(system: str,
     #    per-chunk alpha terms dominate, then non-decreasing (unimodal) — and
     #    a latency-dominated payload is best left unchunked
     params = pipeline_params_at_scale(model, n_big)
-    plan = CommPlan.from_topology(make_paper_systems()[system])
+    plan = plan_for(make_paper_systems()[system])
     depths = [1, 2, 4, 8, 16]
     times = [pipeline_time(plan.bucket_bytes, c, params) for c in depths]
     best = times.index(min(times))

@@ -22,6 +22,7 @@ We implement:
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 import math
 from collections import defaultdict, deque
@@ -600,6 +601,7 @@ class Fabric:
                       nic_bw, nic_bw)
 
 
+@functools.lru_cache(maxsize=None)
 def make_paper_fabrics() -> Dict[str, "Fabric"]:
     """The three paper inter-node fabrics + the TPU DCN, sized so a
     4096-endpoint job fits (paper Sec. V runs up to 4096 GPUs).
@@ -688,6 +690,7 @@ class TwoLevelTopology:
         return min(intra, dcn_phase)
 
 
+@functools.lru_cache(maxsize=None)
 def make_paper_node_graphs() -> Dict[str, LinkGraph]:
     from .hw import ALPS, LEONARDO, LUMI
 
@@ -698,22 +701,29 @@ def make_paper_node_graphs() -> Dict[str, LinkGraph]:
     }
 
 
+@functools.lru_cache(maxsize=None)
 def make_tpu_pod(nx: int = 16, ny: int = 16) -> LinkGraph:
     from .hw import ICI_LINK_BW
 
     return LinkGraph.torus2d(nx, ny, ICI_LINK_BW, f"v5e_pod_{nx}x{ny}")
 
 
+@functools.lru_cache(maxsize=None)
 def make_tpu_multipod(n_pods: int = 2, nx: int = 16, ny: int = 16) -> TwoLevelTopology:
     from .hw import DCN_BW_PER_CHIP
 
     return TwoLevelTopology(make_tpu_pod(nx, ny), n_pods, DCN_BW_PER_CHIP)
 
 
+@functools.lru_cache(maxsize=None)
 def make_paper_systems() -> Dict[str, TwoLevelTopology]:
     """Full two-level system models: intra-node graph + inter-node fabric for
     the three paper machines and the TPU multipod — what the at-scale scenario
-    suite (`core.scenarios`) sweeps from 8 to 4096 endpoints."""
+    suite (`core.scenarios`) sweeps from 8 to 4096 endpoints.
+
+    Memoized (as are the factories above): the scenario sweeps call these in
+    loops, and rebuilding the link graphs / fabrics per call dominated the CI
+    smoke wall time.  Callers treat the returned topologies as immutable."""
     fabrics = make_paper_fabrics()
     systems = {name: TwoLevelTopology.from_fabric(graph, fabrics[name])
                for name, graph in make_paper_node_graphs().items()}

@@ -1,0 +1,196 @@
+"""Wire-format planning: per-tier gradient wire dtype as a calibrated decision.
+
+The paper's software-layer observations (Obs. 1/4/5) say the interconnect is
+rarely the problem — the bytes the software decides to move are.  Compression
+is the bluntest instrument for that: int8 moves 4x fewer DP bytes.  But it
+only pays where the transfer is *bandwidth-bound*; on an alpha-bound tier
+(small per-step payloads, high per-message latency) shrinking the payload
+saves nothing and costs quantization error.
+
+This module turns that tradeoff into a planned decision from the same
+alpha-beta fits the rest of the planner uses (`CommPlan.pipeline`, measured by
+`core.calibrate` when a profile is attached):
+
+  * `WireFormat` — the three wire dtypes the codec implements (fp32 / bf16 /
+    int8 + per-bucket scales) with their bytes-per-element and sideband.
+  * `choose_format(alpha, beta_seconds)` — one tier's decision: compress when
+    the bandwidth term dominates the latency term at the bucket size.
+  * `choose_wire(params, bucket_bytes)` — the per-tier `WireSpec` for a
+    hierarchical plan: the intra tier and the inter (fabric) tier decided
+    independently.  On the modeled systems this lands where the paper points:
+    the inter tier is bandwidth-bound and compresses; the intra tier is
+    alpha-bound at bucket granularity and stays fp32.
+  * `bytes_on_wire(nbytes, fmt, n_buckets)` — wire-aware byte accounting used
+    by `costmodel.exposed_comm_time`, `scenarios.sweep_overlap`, and the
+    dry-run rooflines to price compression.
+
+The chosen spec is persisted as `plan.wire` (see `commplan.CommPlan`) and
+exposed through `autotune.CollectivePolicy.wire`; `runtime.steps` realizes
+fp32/int8 via `--compress-bits` (bf16 exists for planning/pricing and the
+codec round-trips it, but the trainer's lossy wire is the error-feedback int8
+path).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+# bandwidth-term / latency-term thresholds: below BF16_RATIO the tier is
+# alpha-bound (compression saves nothing), above INT8_RATIO it is clearly
+# bandwidth-bound (take the 4x), in between bf16 halves the bytes at
+# negligible accuracy cost
+BF16_RATIO = 2.0
+INT8_RATIO = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class WireFormat:
+    """One wire dtype the bucket codec can put on the fabric."""
+
+    name: str
+    bytes_per_elem: float
+    scale_bytes: int        # per-bucket sideband (int8 carries fp32 scales)
+    lossless: bool
+
+
+WIRE_FORMATS: Dict[str, WireFormat] = {
+    "fp32": WireFormat("fp32", 4.0, 0, True),
+    "bf16": WireFormat("bf16", 2.0, 0, False),
+    "int8": WireFormat("int8", 1.0, 4, False),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class WireSpec:
+    """Per-tier wire formats of a plan: `intra` covers the node/pod graph,
+    `inter` the fabric tiers beyond it."""
+
+    intra: str = "fp32"
+    inter: str = "fp32"
+
+    def __post_init__(self):
+        for fmt in (self.intra, self.inter):
+            if fmt not in WIRE_FORMATS:
+                raise ValueError(f"unknown wire format {fmt!r}; "
+                                 f"one of {sorted(WIRE_FORMATS)}")
+
+    def fmt(self, tier: str) -> str:
+        """Format for a fabric distance tier ("intra" or any inter tier)."""
+        return self.intra if tier == "intra" else self.inter
+
+    def multiplier(self, tier: str) -> float:
+        """Bytes-on-wire multiplier vs fp32 for a tier (0.25 for int8)."""
+        return WIRE_FORMATS[self.fmt(tier)].bytes_per_elem / 4.0
+
+    @property
+    def compresses(self) -> bool:
+        return self.intra != "fp32" or self.inter != "fp32"
+
+    def to_dict(self) -> Dict[str, str]:
+        return {"intra": self.intra, "inter": self.inter}
+
+    @classmethod
+    def from_dict(cls, d: Optional[Dict[str, str]]) -> "WireSpec":
+        d = d or {}
+        return cls(intra=d.get("intra", "fp32"), inter=d.get("inter", "fp32"))
+
+
+def bytes_on_wire(nbytes: float, fmt: str, n_buckets: int = 1) -> float:
+    """Bytes an `nbytes` fp32 payload occupies on the wire in format `fmt`,
+    including the per-bucket scale sideband for int8."""
+    f = WIRE_FORMATS[fmt]
+    return (nbytes / 4.0) * f.bytes_per_elem + n_buckets * f.scale_bytes
+
+
+def wire_time(nbytes: float, fmt: str, alpha: float, bw: float,
+              n_buckets: int = 1) -> float:
+    """Alpha-beta transfer time of an fp32 payload sent in format `fmt`."""
+    return alpha + bytes_on_wire(nbytes, fmt, n_buckets) / bw
+
+
+def choose_format(alpha_s: float, beta_s: float,
+                  allow_lossy: bool = True) -> str:
+    """One tier's wire decision from its latency term (`alpha_s`, seconds per
+    bucket of per-message latency) and bandwidth term (`beta_s`, seconds per
+    bucket on the wire at fp32): compress where bandwidth-bound, stay fp32
+    where alpha-bound."""
+    if not allow_lossy:
+        return "fp32"
+    if alpha_s <= 0:
+        # a zero-latency fit describes a purely bandwidth-bound tier (ratio
+        # -> infinity): that is the case compression helps most
+        return "int8" if beta_s > 0 else "fp32"
+    ratio = beta_s / alpha_s
+    if ratio >= INT8_RATIO:
+        return "int8"
+    if ratio >= BF16_RATIO:
+        return "bf16"
+    return "fp32"
+
+
+def choose_wire(params, bucket_bytes: float,
+                allow_lossy: bool = True) -> WireSpec:
+    """Per-tier wire formats from a plan's `overlap.PipelineParams` alpha-beta
+    constants, evaluated at the plan's bucket size (the unit the runtime
+    actually puts on the wire).
+
+    Inter tier: `alpha_dcn` against the hierarchical share
+    `(bucket / n_ici) / bw_dcn` — compress when bandwidth-bound.  Intra tier:
+    compression is considered only when (a) the fp32 intra phase would *pace*
+    the pipeline (exceed the inter stage at its chosen wire) — when the inter
+    tier is the bottleneck, shrinking the intra bytes cannot shorten the
+    critical path, so the lossy format is all cost and no win — and (b) the
+    *realized* wire actually moves fewer bytes: the runtime implements the
+    lossy intra tier as the int8 gather wire ((n-1)/4 bytes per peer vs the
+    fp32 ring's 2(n-1)/n), which only beats fp32 below n = 8 endpoints.  A
+    planner that ignores (b) turns compression on exactly where it makes the
+    step slower.  The intra decision is therefore int8-or-fp32 (bf16 has no
+    realized intra wire); bf16 remains available to the inter (planning)
+    tier.
+    """
+    n = max(int(params.n_ici), 2)
+    frac = (n - 1) / n
+    a_inter = params.alpha_dcn
+    b_inter = (bucket_bytes / n) / params.bw_dcn
+    inter = choose_format(a_inter, b_inter, allow_lossy)
+    a_intra = (n - 1) * params.alpha_ici
+    b_intra = bucket_bytes * frac / params.bw_ici
+    t_inter = a_inter + b_inter * (WIRE_FORMATS[inter].bytes_per_elem / 4.0)
+    intra = "fp32"
+    if (a_intra + b_intra > t_inter and gather_wins(n)
+            and choose_format(a_intra, b_intra, allow_lossy) != "fp32"):
+        intra = "int8"
+    return WireSpec(intra=intra, inter=inter)
+
+
+def gather_wins(n: int) -> bool:
+    """Whether the realized int8 gather wire ((n-1)/4 bytes per peer + scales)
+    moves strictly fewer bytes than the fp32 bandwidth-optimal allreduce
+    (2(n-1)/n per peer) over an n-endpoint axis: true iff n < 8."""
+    return 2 <= n < 8
+
+
+def realized_multiplier(fmt: str, n: int) -> float:
+    """Bytes-on-wire multiplier of the *realized* wire vs the fp32 allreduce
+    for an n-endpoint gather tier: int8 is the gather wire ((n-1)/4 per peer
+    vs 2(n-1)/n), so its ratio is n/8, not the idealized 0.25 — above n = 8 it
+    is clamped to 1.0 (no win).  Other formats keep the idealized ratio (they
+    exist for planning/pricing, not as runtime wires)."""
+    if fmt == "int8":
+        return min(1.0, max(int(n), 2) / 8.0)
+    return WIRE_FORMATS[fmt].bytes_per_elem / 4.0
+
+
+def choose_wire_single(alpha: float, bw: float, n: int, bucket_bytes: float,
+                       allow_lossy: bool = True) -> WireSpec:
+    """Wire decision for a single-level plan: only the intra tier exists, and
+    the whole axis is the gather domain — the lossy wire is chosen only where
+    the realized int8 gather beats the fp32 allreduce (`gather_wins`)."""
+    n = max(int(n), 2)
+    frac = (n - 1) / n
+    intra = "fp32"
+    if gather_wins(n) and choose_format((n - 1) * alpha,
+                                        bucket_bytes * frac / bw,
+                                        allow_lossy) != "fp32":
+        intra = "int8"
+    return WireSpec(intra=intra, inter=intra)

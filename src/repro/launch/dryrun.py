@@ -149,16 +149,31 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         if shape.kind == "train":
             from ..core.commplan import CommPlan
             from ..core.costmodel import exposed_comm_time
+            from ..core.wire import bytes_on_wire
             topo = topology.make_tpu_multipod() if multi_pod else topology.make_tpu_pod()
             plan = CommPlan.from_topology(topo)
             grad_sizes = [int(a.size) * 4 for a in
                           jax.tree.leaves(model.abstract_params())]
             est = exposed_comm_time(t_comp, plan, grad_sizes, n_endpoints=n_dev)
+            # wire-priced variant: the plan's per-tier wire decision
+            # (core.wire) shrinks the bandwidth terms of compressed tiers
+            est_w = exposed_comm_time(t_comp, plan, grad_sizes,
+                                      n_endpoints=n_dev, wire="plan")
+            wspec = plan.wire_spec()
+            grad_bytes = float(sum(grad_sizes))
+            n_buckets = max(est.n_buckets, 1)
             overlap_terms = dict(
                 exposed_comm_s=est.exposed_s,
                 hidden_comm_fraction=est.hidden_fraction,
                 overlap_chunks=est.chunks,
                 step_time_overlap_s=t_comp + est.exposed_s,
+                wire=wspec.to_dict(),
+                exposed_comm_wire_s=est_w.exposed_s,
+                step_time_wire_s=t_comp + est_w.exposed_s,
+                dp_wire_bytes_fp32=grad_bytes,
+                dp_wire_bytes_planned=bytes_on_wire(
+                    grad_bytes, wspec.inter if multi_pod else wspec.intra,
+                    n_buckets),
             )
         cell.update(
             status="ok",

@@ -377,3 +377,30 @@ def analyze_cost(hlo_text: str) -> ModuleCost:
             operand_bytes = sum(_operand_bytes(on) for on in operands)
             cost._add(op_kind, (res_bytes + operand_bytes) * m_exec, line)
     return cost
+
+
+# ------------------------------------------------------------- jaxpr counting
+def count_jaxpr_eqns(closed, name: Optional[str] = None) -> int:
+    """Count jaxpr equations (all, or those of primitive `name`), recursing
+    into nested closed jaxprs (scan/cond/remat bodies).  The jaxpr-level
+    sibling of the HLO byte accounting above — used by the wire-codec op-count
+    regressions (tests and `benchmarks.run wire`)."""
+    import jax
+
+    cnt = 0
+
+    def walk(jaxpr):
+        nonlocal cnt
+        for eqn in jaxpr.eqns:
+            if name is None or eqn.primitive.name == name:
+                cnt += 1
+            for v in eqn.params.values():
+                vals = v if isinstance(v, (tuple, list)) else (v,)
+                for u in vals:
+                    if isinstance(u, jax.core.ClosedJaxpr):
+                        walk(u.jaxpr)
+                    elif isinstance(u, jax.core.Jaxpr):
+                        walk(u)
+
+    walk(closed.jaxpr if hasattr(closed, "jaxpr") else closed)
+    return cnt

@@ -4,7 +4,8 @@
       --steps 100 [--reduced] [--mesh 2x4] [--microbatches 4] [--resume] \
       [--residual-shard] [--fused-qkv] [--policy artifacts/policy.json] \
       [--calibration artifacts/bench/calibration.json] \
-      [--explicit-dp] [--bucket-bytes N]
+      [--explicit-dp] [--bucket-bytes N] [--overlap] [--chunks C] \
+      [--compress-bits {0,8,auto}]
 
 On this CPU container use --reduced (full configs are exercised via the dry-run).
 The mesh string "DxM" builds (data=D, model=M) over the available devices;
@@ -61,6 +62,14 @@ def main(argv=None):
     ap.add_argument("--bucket-bytes", type=int, default=None,
                     help="gradient bucket size for --explicit-dp (default: the "
                          "plan's latency/bandwidth crossover; 0 = per-tensor)")
+    ap.add_argument("--compress-bits", default="0",
+                    help="int8 error-feedback wire compression for "
+                         "--explicit-dp: 8 = on (composes with --overlap/"
+                         "--chunks via the per-bucket codec), 0 = fp32 wire, "
+                         "auto = compress iff the plan's calibrated wire "
+                         "decision picks a lossy format on a tier the "
+                         "runtime's int8 wire rides (the DP-axis gather; the "
+                         "inter leg of a two-level mesh stays fp32)")
     ap.add_argument("--overlap", action="store_true",
                     help="overlap-aware explicit-DP execution (implies "
                          "--explicit-dp): reverse-layer-order gradient buckets "
@@ -138,7 +147,40 @@ def main(argv=None):
     if policy is not None:
         src = policy.meta.get("source", "?")
         print(f"policy: {args.policy or args.calibration} (source={src}, "
-              f"bucket={policy.bucket_bytes} B)")
+              f"bucket={policy.bucket_bytes} B, "
+              f"wire={policy.wire.intra}/{policy.wire.inter})")
+    if args.compress_bits == "auto":
+        # the plan's calibrated per-tier wire decision (core.wire), restricted
+        # to what the runtime's wire can realize: int8 rides the gather over
+        # the DP axis, so on a flat mesh that gather spans the whole fabric
+        # (any planned lossy tier pays), while on a two-level mesh the inter
+        # leg stays fp32 and only a lossy *intra* decision is realizable.  A
+        # bf16-planned tier maps to the int8 error-feedback wire (the only
+        # lossy format the trainer implements — strictly fewer bytes, and
+        # error feedback where bf16 would round silently).
+        from ..core.autotune import CollectivePolicy as _CP
+        from ..core.wire import gather_wins
+        wire = (policy or _CP.from_model()).wire
+        realizable = args.explicit_dp and (
+            (wire.intra != "fp32") if dcn_axis is not None
+            else wire.compresses)
+        # the realized int8 gather must also win at the mesh's actual gather
+        # axis size — above 8 endpoints it moves more bytes than fp32.
+        # Without --explicit-dp there is no wire to compress: auto resolves
+        # to 0 (only a literal 8 hard-errors below).
+        n_gather = mesh.shape.get("data", 1) if mesh is not None else 1
+        realizable = realizable and gather_wins(n_gather)
+        compress_bits = 8 if realizable else 0
+        print(f"wire: {wire.intra}/{wire.inter} -> compress_bits={compress_bits}")
+    else:
+        try:
+            compress_bits = int(args.compress_bits)
+        except ValueError:
+            raise SystemExit(f"--compress-bits {args.compress_bits!r}: "
+                             f"want 0, 8, or auto")
+    if compress_bits and not args.explicit_dp:
+        raise SystemExit("--compress-bits needs --explicit-dp (the XLA SPMD "
+                         "path chooses its own collectives)")
 
     trainer = Trainer(
         cfg, shape,
@@ -148,7 +190,8 @@ def main(argv=None):
                     log_every=10, straggler_threshold=args.straggler_threshold,
                     explicit_dp=args.explicit_dp, dcn_axis=dcn_axis,
                     policy=policy, bucket_bytes=args.bucket_bytes,
-                    overlap=args.overlap, chunks=args.chunks),
+                    overlap=args.overlap, chunks=args.chunks,
+                    compress_bits=compress_bits),
         mesh=mesh,
     )
     result = trainer.run(resume=args.resume)

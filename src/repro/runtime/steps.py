@@ -155,14 +155,28 @@ def build_explicit_dp_step(model: Model, opt: adamw.OptConfig, mesh, axis: str =
     compression on the wire (4x fewer DP bytes).
 
     Bucketing (the paper's message-aggregation optimization): the flat gradient
-    list is concatenated and split into fixed `bucket_bytes` chunks before
-    reduction, so small tensors stop paying per-message latency.  The default
-    bucket size comes from the plan's latency/bandwidth crossover; pass
-    `bucket_bytes=0` to reduce per-tensor.  Bucketing is mutually exclusive
-    with `compress_bits` (compression uses per-tensor scales); requesting both
-    raises.  `dcn_axis` on a two-pod mesh routes
-    every bucket through the hierarchical intra-RS / inter-AR / intra-AG
-    schedule (selected whenever the plan was built from a two-level topology).
+    list is packed by the fused wire codec (`kernels.bucket_codec`) into fixed
+    `bucket_bytes` rows before reduction, so small tensors stop paying
+    per-message latency — one fused pack and one fused unpack per step, O(1)
+    concatenate ops regardless of leaf count (the old path emitted one
+    concatenate per bucket and per leaf).  The default bucket size comes from
+    the plan's latency/bandwidth crossover; pass `bucket_bytes=0` to reduce
+    per-tensor.  `dcn_axis` on a two-pod mesh routes every bucket through the
+    hierarchical intra-RS / inter-AR / intra-AG schedule (selected whenever
+    the plan was built from a two-level topology).
+
+    Compression (`compress_bits=8`) now *composes* with bucketing and overlap:
+    the codec quantizes to the int8 wire inside the pack kernel with
+    per-bucket scales, and the error-feedback state is a carrier-shaped
+    `(n_buckets, bucket_elems)` fp32 buffer carried per bucket through the
+    scan schedule (donated through the jit, so steady-state steps reuse the
+    buffer).  Reduction of a quantized bucket all-gathers the int8 payload +
+    scales and sums after dequant (`overlap.quantized_all_reduce`); on a
+    two-level mesh the inter leg stays fp32 (requantizing partial sums would
+    add error outside the error-feedback loop) and `chunks > 1` pipelines the
+    intra gather of chunk t against the inter psum of chunk t-1.  Without
+    bucketing/overlap, `compress_bits=8` keeps the legacy per-tensor wire
+    (per-tensor scales).
 
     Overlap (`overlap=True`, paper Sec. VI / Obs. 1): buckets are built in
     *reverse layer order* (the order backward materializes gradients) and
@@ -173,19 +187,20 @@ def build_explicit_dp_step(model: Model, opt: adamw.OptConfig, mesh, axis: str =
     microbatch's backward and overlaps it.  With `dcn_axis`, each bucket runs
     the chunked double-buffered hierarchical pipeline; `chunks=None` takes the
     pipeline depth from the plan's per-tier alpha-beta fits
-    (`plan.pipeline_chunks`).  Overlap implies bucketing and therefore
-    excludes `compress_bits`.
+    (`plan.pipeline_chunks`).
+
+    The returned step exposes `step.init_error_state(params)` — carrier-shaped
+    zeros when compression rides buckets, per-leaf zeros otherwise.
     """
     from jax.sharding import PartitionSpec as P
     from ..core import overlap as ov
+    from ..kernels import bucket_codec as codec
 
     policy = policy or CollectivePolicy.from_model()
     n = mesh.shape[axis]
     n_total = n * (mesh.shape[dcn_axis] if dcn_axis is not None else 1)
-    if compress_bits and (bucket_bytes or overlap):
-        raise ValueError("gradient bucketing/overlap does not compose with "
-                         "int8 compression (per-tensor scales); pass "
-                         "bucket_bytes=0 and overlap=False")
+    if compress_bits not in (0, 8):
+        raise ValueError(f"compress_bits must be 0 or 8, got {compress_bits}")
     if microbatches > 1 and not overlap:
         raise ValueError("explicit-DP microbatching is implemented by the "
                          "overlap schedule; pass overlap=True")
@@ -196,9 +211,14 @@ def build_explicit_dp_step(model: Model, opt: adamw.OptConfig, mesh, axis: str =
                          "reduction (bucket_bytes=0) is not supported — omit "
                          "bucket_bytes to use the plan's crossover")
     if bucket_bytes is None:
-        bucket_bytes = 0 if compress_bits else getattr(policy, "bucket_bytes", 0)
+        # plain compress_bits (no overlap, no explicit bucket size) keeps the
+        # legacy per-tensor wire; bucketed compression opts in via
+        # bucket_bytes/overlap
+        bucket_bytes = 0 if (compress_bits and not overlap) \
+            else getattr(policy, "bucket_bytes", 0)
     if overlap and not bucket_bytes:
         bucket_bytes = 4 << 20  # policy carried no crossover (legacy tables)
+    bucketed = bucket_bytes > 0
     loss_axes = (dcn_axis, axis) if dcn_axis is not None else axis
     plan_hier = bool(getattr(policy, "hierarchical", False))
     if chunks is None:
@@ -206,6 +226,7 @@ def build_explicit_dp_step(model: Model, opt: adamw.OptConfig, mesh, axis: str =
         chunks = chunks_fn(bucket_bytes) if (chunks_fn is not None and
                                              dcn_axis is not None) else 1
     chunks = max(int(chunks), 1)
+    bucket_elems = max(bucket_bytes // 4, 1)
 
     def reduce_bucket(buf):
         """One packed fp32 bucket through the planned reduction: the chunked
@@ -215,54 +236,123 @@ def build_explicit_dp_step(model: Model, opt: adamw.OptConfig, mesh, axis: str =
                                                       n_chunks=chunks)
         return policy.all_reduce(buf, axis, n, dcn_axis=dcn_axis)
 
-    def reduce_bucketed(flat_g):
-        """Pack the flat gradient stream into exact bucket_bytes chunks (tensors
-        split at bucket boundaries, forward order) and reduce each — exactly
-        ceil(total_bytes / bucket_bytes) all-reduce calls, with transient memory
-        bounded by ~one bucket rather than a full concatenated gradient copy.
-        Span construction and scatter-back are shared with the overlap engine
-        (`core.overlap`); only the issue schedule differs (eager, post-backward)."""
-        elems = max(bucket_bytes // 4, 1)  # fp32 on the wire
-        buckets = ov.make_buckets([g.size for g in flat_g], elems, reverse=False)
-        rows = [policy.all_reduce(
-                    ov.pack_buckets(flat_g, [b], 1.0 / n_total, pad=False)[0],
-                    axis, n, dcn_axis=dcn_axis)
-                for b in buckets]
-        return ov.unpack_buckets(rows, buckets, flat_g)
+    def reduce_q(row_and_scale, n_chunks=1):
+        """One int8 bucket (row + per-bucket scale) over the wire: intra
+        all-gather of the payload + scales, local dequant-sum, fp32 inter leg;
+        chunked double-buffered across the two tiers when `n_chunks > 1`."""
+        q_row, s_row = row_and_scale
+        return ov.quantized_all_reduce(q_row, s_row, axis, dcn_axis=dcn_axis,
+                                       n_chunks=n_chunks)
 
-    def overlap_grads(params, batch):
+    def reduce_bucketed(flat_g, err):
+        """Pack the flat gradient stream into bucket_bytes rows (tensors split
+        at bucket boundaries, forward order) and reduce each eagerly — exactly
+        ceil(total_bytes / bucket_bytes) all-reduce calls, post-backward.  The
+        codec shares span construction with the overlap engine; only the issue
+        schedule differs.  With compression, quantization (and the per-bucket
+        error feedback) happens in the pack."""
+        table = codec.make_table([g.size for g in flat_g], bucket_elems,
+                                 reverse=False)
+        if table.n_buckets == 0:
+            return [g.astype(jnp.float32) for g in flat_g], err
+        cap = table.bucket_elems
+        tail = table.total_elems - (table.n_buckets - 1) * cap
+
+        def reduce_row(k, row, fn):
+            # the final partial bucket keeps its exact wire size: the zero pad
+            # is never sent (and the size-dependent algorithm dispatch sees
+            # the true payload)
+            if k == table.n_buckets - 1 and tail < cap:
+                red = fn(row[:tail])
+                return jnp.concatenate(
+                    [red, jnp.zeros((cap - tail,), red.dtype)])
+            return fn(row)
+
+        if compress_bits == 8:
+            q, s, new_err = codec.pack(table, flat_g, scale=1.0 / n_total,
+                                       wire="int8", err=err)
+            rows = [reduce_row(k, q[k],
+                               lambda r, kk=k: reduce_q((r, s[kk]),
+                                                        n_chunks=chunks))
+                    for k in range(table.n_buckets)]
+            return codec.unpack(table, rows, flat_g), new_err
+        carrier, _, _ = codec.pack(table, flat_g, scale=1.0 / n_total)
+        rows = [reduce_row(k, carrier[k],
+                           lambda r: policy.all_reduce(r, axis, n,
+                                                       dcn_axis=dcn_axis))
+                for k in range(table.n_buckets)]
+        return codec.unpack(table, rows, flat_g), err
+
+    def overlap_grads(params, batch, err):
         """Reverse-layer-order bucketed gradients under the overlap issue
         schedule.  Returns (mean loss over microbatches, reduced flat grads in
-        fp32, tree def)."""
+        fp32, tree def, new error state)."""
         inv = 1.0 / (n_total * microbatches)
 
         def grads_of(b):
             loss, grads = jax.value_and_grad(model.loss)(params, b)
             flat, tdef = jax.tree.flatten(grads)
-            return loss, flat, tdef
+            # pin one canonical materialization of the (rematted) backward:
+            # without the barrier XLA re-fuses the grad computation per wire
+            # consumer graph, so different wire paths see bf16-ulp-different
+            # gradient bits and step numerics depend on the wire configuration
+            return loss, jax.lax.optimization_barrier(flat), tdef
 
         if microbatches == 1:
             loss, flat_g, tdef = grads_of(batch)
-            buckets = ov.make_buckets([g.size for g in flat_g],
-                                      max(bucket_bytes // 4, 1))
-            if not buckets:  # every gradient leaf is zero-size
-                return loss, [g.astype(jnp.float32) for g in flat_g], tdef
-            stacked = ov.pack_buckets(flat_g, buckets, inv)
+            table = codec.make_table([g.size for g in flat_g], bucket_elems)
+            if table.n_buckets == 0:  # every gradient leaf is zero-size
+                return loss, [g.astype(jnp.float32) for g in flat_g], tdef, err
+            if compress_bits == 8:
+                q, s, new_err = codec.pack(table, flat_g, scale=inv,
+                                           wire="int8", err=err)
+                # scan-carried issue schedule over the quantized carrier: one
+                # int8 bucket (+ scale) in flight at a time
+                reduced = ov.scan_bucket_reduce(
+                    (q, s), partial(reduce_q, n_chunks=chunks))
+                return loss, codec.unpack(table, reduced, flat_g), tdef, new_err
+            carrier, _, _ = codec.pack(table, flat_g, scale=inv)
             # scan-carried issue schedule: one bucket in flight at a time, in
             # the order backward materializes them
-            reduced = ov.scan_bucket_reduce(stacked, reduce_bucket)
-            return loss, ov.unpack_buckets(reduced, buckets, flat_g), tdef
+            reduced = ov.scan_bucket_reduce(carrier, reduce_bucket)
+            return loss, codec.unpack(table, reduced, flat_g), tdef, err
 
         mb = _microbatch(batch, microbatches)
         mb0 = jax.tree.map(lambda a: a[0], mb)
         rest = jax.tree.map(lambda a: a[1:], mb)
         loss0, flat0, tdef = grads_of(mb0)
-        buckets = ov.make_buckets([g.size for g in flat0],
-                                  max(bucket_bytes // 4, 1))
-        if not buckets:
+        table = codec.make_table([g.size for g in flat0], bucket_elems)
+        nb = table.n_buckets
+        if nb == 0:
             raise ValueError("overlap microbatching found no gradient "
                              "elements to reduce (all leaves zero-size)")
-        pending0 = ov.pack_buckets(flat0, buckets, inv)
+
+        if compress_bits == 8:
+            q0, s0, err1 = codec.pack(table, flat0, scale=inv, wire="int8",
+                                      err=err)
+
+            def body_q(carry, b):
+                acc, q_p, s_p, err_c, lsum = carry
+                # issue the previous microbatch's quantized bucket reductions
+                # FIRST: no data dependency on this microbatch's backward
+                reduced = jnp.stack([reduce_q((q_p[k], s_p[k]),
+                                              n_chunks=chunks)
+                                     for k in range(nb)])
+                loss, flat, _ = grads_of(b)
+                # per-bucket error feedback carried through the scan
+                q_n, s_n, err_c = codec.pack(table, flat, scale=inv,
+                                             wire="int8", err=err_c)
+                return (acc + reduced, q_n, s_n, err_c, lsum + loss), None
+
+            init = (jnp.zeros((nb, table.bucket_elems), jnp.float32),
+                    q0, s0, err1, loss0)
+            (acc, q_p, s_p, err_c, lsum), _ = jax.lax.scan(body_q, init, rest)
+            final = jnp.stack([reduce_q((q_p[k], s_p[k]), n_chunks=chunks)
+                               for k in range(nb)])
+            loss = lsum / microbatches
+            return (loss, codec.unpack(table, acc + final, flat0), tdef, err_c)
+
+        pending0, _, _ = codec.pack(table, flat0, scale=inv)
 
         def body(carry, b):
             acc, pending, lsum = carry
@@ -270,30 +360,29 @@ def build_explicit_dp_step(model: Model, opt: adamw.OptConfig, mesh, axis: str =
             # have no data dependency on this microbatch's backward, so the
             # scheduler overlaps the reduction stream with the backward compute
             reduced = jnp.stack([reduce_bucket(pending[k])
-                                 for k in range(len(buckets))])
+                                 for k in range(nb)])
             loss, flat, _ = grads_of(b)
-            nxt = ov.pack_buckets(flat, buckets, inv)
+            nxt, _, _ = codec.pack(table, flat, scale=inv)
             return (acc + reduced, nxt, lsum + loss), None
 
         init = (jnp.zeros_like(pending0), pending0, loss0)
         (acc, pending, lsum), _ = jax.lax.scan(body, init, rest)
         # flush: the last microbatch's buckets have no backward left to hide
         # behind — this is the exposed tail the predictor charges for
-        final = jnp.stack([reduce_bucket(pending[k])
-                           for k in range(len(buckets))])
+        final = jnp.stack([reduce_bucket(pending[k]) for k in range(nb)])
         reduced = acc + final
         loss = lsum / microbatches
-        return loss, ov.unpack_buckets(reduced, buckets, flat0), tdef
+        return loss, codec.unpack(table, reduced, flat0), tdef, err
 
     def local_step(params, opt_state, batch, err):
         if overlap:
-            loss, red_flat, tdef = overlap_grads(params, batch)
+            loss, red_flat, tdef, new_err = overlap_grads(params, batch, err)
             loss = jax.lax.pmean(loss, loss_axes)
             grads = tdef.unflatten(red_flat)
             params, opt_state, metrics = adamw.apply_updates(params, grads,
                                                              opt_state, opt)
             metrics["loss"] = loss
-            return params, opt_state, metrics, err
+            return params, opt_state, metrics, new_err
         loss, grads = jax.value_and_grad(model.loss)(params, batch)
         loss = jax.lax.pmean(loss, loss_axes)
 
@@ -320,16 +409,18 @@ def build_explicit_dp_step(model: Model, opt: adamw.OptConfig, mesh, axis: str =
             return policy.all_reduce(g32, axis, n, dcn_axis=dcn_axis), e
 
         flat_g, tdef = jax.tree.flatten(grads)
-        flat_e = tdef.flatten_up_to(err)
-        if compress_bits == 0 and bucket_bytes > 0:
-            reduced = reduce_bucketed(flat_g)
-            new_err_flat = flat_e
+        # same canonical-materialization barrier as the overlap path: the
+        # reduced gradients must not depend on which wire path consumes them
+        flat_g = jax.lax.optimization_barrier(flat_g)
+        if bucketed:
+            # err is carrier-shaped (compression) or passed through (fp32)
+            reduced, new_err = reduce_bucketed(flat_g, err)
+            grads = tdef.unflatten(reduced)
         else:
+            flat_e = tdef.flatten_up_to(err)
             out = [reduce_one(g, e) for g, e in zip(flat_g, flat_e)]
-            reduced = [o[0] for o in out]
-            new_err_flat = [o[1] for o in out]
-        grads = tdef.unflatten(reduced)
-        new_err = tdef.unflatten(new_err_flat)
+            grads = tdef.unflatten([o[0] for o in out])
+            new_err = tdef.unflatten([o[1] for o in out])
         params, opt_state, metrics = adamw.apply_updates(params, grads, opt_state, opt)
         metrics["loss"] = loss
         return params, opt_state, metrics, new_err
@@ -356,20 +447,43 @@ def build_explicit_dp_step(model: Model, opt: adamw.OptConfig, mesh, axis: str =
     # flattened tree-structure tuple: repeat calls with the same structures
     # reuse one jit (no per-step retrace), while a call with a different
     # batch/params structure gets fresh specs instead of silently reusing the
-    # first call's stale shard_map specs.
+    # first call's stale shard_map specs.  Under compression the error state
+    # (the codec's carrier-shaped buffer) is donated through the jit: it is
+    # consumed and replaced every step, so steady-state training reuses the
+    # carrier buffer instead of allocating a fresh one each step.  The fp32
+    # paths pass err through untouched, where donation would only forbid
+    # callers from reusing it for no win — so it is gated on compress_bits.
     cache: Dict[Tuple, Callable] = {}
+    donate = (3,) if compress_bits else ()
 
     def step(params, opt_state, batch, err):
         key = tuple(jax.tree.structure(t)
                     for t in (params, opt_state, batch, err))
         fn = cache.get(key)
         if fn is None:
-            fn = cache[key] = jax.jit(make(params, opt_state, batch, err))
+            fn = cache[key] = jax.jit(make(params, opt_state, batch, err),
+                                      donate_argnums=donate)
         return fn(params, opt_state, batch, err)
 
+    def make_error_state(params):
+        """Zeros of this step's error-feedback state: a carrier-shaped
+        (n_buckets, bucket_elems) fp32 buffer when compression rides buckets,
+        per-leaf zeros otherwise (the per-tensor legacy wire)."""
+        if compress_bits == 8 and bucketed:
+            sizes = [p.size for p in jax.tree.leaves(params)]
+            table = codec.make_table(sizes, bucket_elems,
+                                     reverse=bool(overlap))
+            return jnp.zeros((max(table.n_buckets, 1), table.bucket_elems),
+                             jnp.float32)
+        return init_error_state(params)
+
     step._cache = cache  # introspectable by tests
+    step.init_error_state = make_error_state
     return step
 
 
 def init_error_state(params):
+    """Per-leaf error-feedback zeros (the per-tensor wire's state shape).
+    Steps built by `build_explicit_dp_step` expose `step.init_error_state`,
+    which returns the carrier-shaped buffer when compression is bucketed."""
     return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -48,6 +48,10 @@ class TrainConfig:
     dcn_axis: Optional[str] = None
     policy: Optional[object] = None       # core.autotune.CollectivePolicy
     bucket_bytes: Optional[int] = None    # None = plan crossover, 0 = per-tensor
+    # int8 error-feedback wire compression (0 = fp32 wire).  Composes with
+    # bucketing and overlap: the codec quantizes per bucket and the error
+    # state becomes the carrier-shaped buffer (see runtime.steps)
+    compress_bits: int = 0
     # overlap-aware execution (core.overlap): reverse-layer-order buckets on a
     # scan-carried issue schedule; with microbatches > 1 each bucket's
     # reduction overlaps the next microbatch's backward, and on a two-level
@@ -110,12 +114,13 @@ class Trainer:
             self.model, self.opt, mesh, c.dp_axis, policy=c.policy,
             bucket_bytes=c.bucket_bytes, dcn_axis=c.dcn_axis,
             overlap=c.overlap, chunks=c.chunks,
-            microbatches=c.microbatches)
+            microbatches=c.microbatches, compress_bits=c.compress_bits)
         self._dp_err = None
 
         def step_fn(params, opt_state, batch):
             if self._dp_err is None:
-                self._dp_err = rsteps.init_error_state(params)
+                # carrier-shaped under bucketed compression, per-leaf otherwise
+                self._dp_err = dp_step.init_error_state(params)
             params, opt_state, metrics, self._dp_err = dp_step(
                 params, opt_state, batch, self._dp_err)
             return params, opt_state, metrics

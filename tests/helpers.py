@@ -14,6 +14,14 @@ REPO = Path(__file__).resolve().parent.parent
 SRC = str(REPO / "src")
 
 
+def count_eqns(closed, name: str = None) -> int:
+    """Count jaxpr equations (all of them, or those of primitive `name`) —
+    the shared walker lives in `repro.launch.hlo_analysis`."""
+    from repro.launch.hlo_analysis import count_jaxpr_eqns
+
+    return count_jaxpr_eqns(closed, name)
+
+
 def run_devices(code: str, n_devices: int = 8, timeout: int = 420) -> str:
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"

@@ -25,6 +25,56 @@ def test_staging_order_of_magnitude_slower():
     assert direct / staged > 3
 
 
+def test_allreduce_intra_staging_pinned():
+    """Regression: the staging mechanism must early-return its
+    store-and-forward formula — the algorithm dispatch used to compute a time
+    the staging line then silently discarded (and raised on algorithms it
+    never ran)."""
+    m = make_comm_model("lumi")
+    s = float(1 << 20)
+    n = m.graph.n
+    expected = m._alpha("staging", False) \
+        + 2 * n * s / (m.profile.host_staging_bw * 0.9)
+    got = m.allreduce_intra(s, "staging")
+    assert got.seconds == pytest.approx(expected, rel=1e-12)
+    assert got.bytes_on_wire == pytest.approx(2 * s * (n - 1) / n)
+    # the algorithm argument is irrelevant to staging — including algorithms
+    # the dispatch below would reject
+    for algo in ("auto", "ring", "one_shot", "not_an_algorithm"):
+        assert m.allreduce_intra(s, "staging", algorithm=algo).seconds \
+            == pytest.approx(expected, rel=1e-12)
+    # non-staging mechanisms still validate the algorithm name
+    with pytest.raises(ValueError):
+        m.allreduce_intra(s, "ccl", algorithm="not_an_algorithm")
+
+
+def test_make_comm_model_memoized():
+    """Models (and the topology factories beneath them) are built once per
+    (system, calibration identity): the scenario sweeps call them in loops."""
+    from repro.core.topology import make_paper_systems
+
+    assert make_comm_model("lumi") is make_comm_model("lumi")
+    assert make_comm_model("lumi") is not make_comm_model("alps")
+    assert make_paper_systems() is make_paper_systems()
+
+    class FakeCal:
+        version = 1
+        system = "lumi"
+        n_endpoints = 4
+
+        def efficiency(self, *a, **k):
+            return None
+
+        def get(self, *a, **k):
+            return None
+
+    cal = FakeCal()
+    m1 = make_comm_model("lumi", calibration=cal)
+    assert m1 is make_comm_model("lumi", calibration=cal)
+    assert m1 is not make_comm_model("lumi")
+    assert make_comm_model("lumi", calibration=FakeCal()) is not m1
+
+
 def test_mpi_beats_ccl_small_inter_node():
     # Obs. 5: MPI up to an order of magnitude faster on small inter-node transfers
     m = make_comm_model("lumi")
