@@ -420,6 +420,111 @@ def bench_wire():
     return rows
 
 
+def bench_zero():
+    """ZeRO three-phase wire path (RS -> sharded AdamW -> AG): planned wire
+    bytes vs the allreduce schedule, optimizer-state memory / DP degree, and a
+    live zero-vs-replicated step on the host devices.  Writes BENCH_6.json at
+    the repo root so the perf trajectory accumulates across PRs."""
+    import json
+    from pathlib import Path
+
+    import numpy as np
+    import jax
+    import repro.compat  # noqa: F401
+    from repro.core import wire as wr
+    from repro.core.commplan import CommPlan
+    from repro.core.costmodel import exposed_comm_time
+    from repro.core.scenarios import synthetic_grad_sizes
+    from repro.core.topology import make_tpu_pod
+    from .common import emit
+
+    rows = []
+    bench = {"pr": 6, "section": "zero"}
+
+    # ---- planned wire bytes: RS + int8 AG vs 2x allreduce at n=8
+    grad_bytes = 64 << 20
+    nb = max(grad_bytes // (4 << 20), 1)
+    zwb = wr.zero_wire_bytes(grad_bytes, 8, ag_fmt="int8", n_buckets=nb)
+    assert zwb["ratio"] <= 0.6, zwb   # the PR's planning target
+    zwb_fp = wr.zero_wire_bytes(grad_bytes, 8, ag_fmt="fp32", n_buckets=nb)
+    rows.append({"name": "zero/wire_bytes/int8_ag_8dev", "us_per_call": 0.0,
+                 "derived": f"ratio={zwb['ratio']:.3f} vs allreduce "
+                            f"(fp32 ratio={zwb_fp['ratio']:.3f})"})
+    bench["wire_bytes"] = {"grad_bytes": grad_bytes, "n": 8,
+                           "int8_ag": zwb, "fp32_ag": zwb_fp}
+
+    # ---- predicted exposed comm: zero vs allreduce schedule on the pod
+    plan = CommPlan.from_topology(make_tpu_pod())
+    sizes = synthetic_grad_sizes(grad_bytes)
+    ar = exposed_comm_time(0.01, plan, sizes, n_endpoints=8)
+    z8 = exposed_comm_time(0.01, plan, sizes, n_endpoints=8, schedule="zero",
+                           wire={"intra": "int8", "inter": "int8"})
+    rows.append({"name": "zero/predicted_comm/pod8", "us_per_call": 0.0,
+                 "derived": f"zero_int8={z8.total_comm_s * 1e3:.2f}ms vs "
+                            f"allreduce={ar.total_comm_s * 1e3:.2f}ms"})
+    bench["predicted"] = {"allreduce_comm_s": ar.total_comm_s,
+                          "zero_int8_comm_s": z8.total_comm_s}
+
+    # ---- live step: replicated allreduce vs three-phase zero
+    if jax.device_count() >= 2:
+        from jax.sharding import AxisType
+        from repro.configs import get_config
+        from repro.configs.base import ShapeConfig
+        from repro.models import build_model
+        from repro.optim import adamw
+        from repro.runtime import steps as rsteps
+
+        n = jax.device_count()
+        mesh = jax.make_mesh((n,), ("data",), axis_types=(AxisType.Auto,))
+        cfg = get_config("smollm-135m").reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        batch = model.make_batch(ShapeConfig("b", 32, 2 * n, "train"))
+        step_times = {}
+        for label, kw in (("replicated", {}),
+                          ("zero", {"zero": True}),
+                          ("zero_int8", {"zero": True, "compress_bits": 8})):
+            step = rsteps.build_explicit_dp_step(
+                model, adamw.OptConfig(), mesh, "data", overlap=True,
+                bucket_bytes=1 << 20, **kw)
+            ostate = step.init_opt_state(params) if kw.get("zero") \
+                else adamw.init_opt_state(params)
+            err = step.init_error_state(params)
+            out = step(params, ostate, batch, err)
+            jax.block_until_ready(out[2]["loss"])
+            ts = []
+            for _ in range(3):
+                t0 = time.perf_counter()
+                out = step(params, ostate, batch, out[3])
+                jax.block_until_ready(out[2]["loss"])
+                ts.append(time.perf_counter() - t0)
+            step_times[label] = float(np.median(ts))
+            rows.append({"name": f"zero/live_step/{label}_{n}dev",
+                         "us_per_call": step_times[label] * 1e6,
+                         "derived": f"loss={float(out[2]['loss']):.3f}"})
+            if kw.get("zero"):
+                # optimizer memory: carrier-sharded m/v really is full / n
+                m = out[1]["m"]
+                shard_b = m.addressable_shards[0].data.nbytes
+                assert shard_b * n == m.nbytes, (shard_b, n, m.nbytes)
+                bench.setdefault("opt_state", {})[label] = {
+                    "full_bytes": int(m.nbytes) * 2,
+                    "per_device_bytes": int(shard_b) * 2}
+        # gross-regression tripwire only: on a host-device CPU "fabric" the
+        # collectives are memcpys, so zero's win is memory, not time — it
+        # just must not be genuinely slower than the replicated step
+        assert step_times["zero"] <= step_times["replicated"] * 2.0, step_times
+        bench["live_step"] = {f"{k}_us": v * 1e6 for k, v in step_times.items()}
+        bench["live_step"]["devices"] = n
+
+    path = Path(__file__).resolve().parent.parent / "BENCH_6.json"
+    path.write_text(json.dumps(bench, indent=2))
+    rows.append({"name": "zero/bench_artifact", "us_per_call": 0.0,
+                 "derived": str(path)})
+    emit("zero", rows, ["name", "us_per_call", "derived"])
+    return rows
+
+
 def main() -> None:
     from .figures import ALL_FIGURES
 
@@ -433,6 +538,7 @@ def main() -> None:
     sections["at_scale"] = bench_at_scale
     sections["overlap"] = bench_overlap
     sections["wire"] = bench_wire
+    sections["zero"] = bench_zero
     failures = []
     for name, fn in sections.items():
         if filters and not any(f in name for f in filters):

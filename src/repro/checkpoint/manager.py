@@ -61,9 +61,19 @@ class CheckpointManager:
 
     # ----------------------------------------------------------------- save
     def save(self, step: int, tree, extra: Optional[Dict] = None,
-             blocking: bool = True) -> None:
-        """Snapshot `tree` (any pytree of arrays) at `step`."""
+             blocking: bool = True,
+             specs: Optional[Dict[str, str]] = None) -> None:
+        """Snapshot `tree` (any pytree of arrays) at `step`.
+
+        `specs` maps leaf names (e.g. ``"opt/m"``) to a shard-spec string
+        recorded in the manifest's ``shard`` field — e.g. the ZeRO trainer's
+        ``"zero-carrier:data"`` for carrier-sharded optimizer moments.  The
+        arrays written are still the full (gathered) values; the spec is
+        layout *metadata* that `restore` checks so a sharded checkpoint is
+        never silently loaded into a replicated trainer or vice versa.
+        """
         self.wait()  # one async save in flight at a time
+        specs = specs or {}
         leaves, _ = _flatten_with_paths(tree)
         # snapshot to host memory now (cheap vs. I/O); training may proceed after.
         # bf16 has no native numpy dtype: store as a uint16 view + logical dtype.
@@ -78,7 +88,8 @@ class CheckpointManager:
             "time": time.time(),
             "extra": extra or {},
             "leaves": [
-                {"name": n, "shape": list(a.shape), "dtype": dt, "shard": None}
+                {"name": n, "shape": list(a.shape), "dtype": dt,
+                 "shard": specs.get(n)}
                 for n, a, dt in host
             ],
         }
@@ -128,15 +139,46 @@ class CheckpointManager:
         return max(steps) if steps else None
 
     def restore(self, tree_like, step: Optional[int] = None,
-                shardings=None) -> Tuple[Any, Dict]:
+                shardings=None,
+                specs: Optional[Dict[str, str]] = None) -> Tuple[Any, Dict]:
         """Restore into the structure of `tree_like`.  `shardings` (same pytree
-        structure or a pytree of NamedShardings) reshard onto the current mesh."""
+        structure or a pytree of NamedShardings) reshard onto the current mesh.
+
+        `specs` declares which leaves the *caller* expects to be shard-laid-out
+        (same name -> spec-string mapping as `save`).  A mismatch against the
+        manifest raises before any leaf is loaded: restoring a ZeRO
+        carrier-sharded checkpoint into a replicated trainer (or the reverse)
+        would reinterpret optimizer moments under the wrong layout, not just
+        the wrong shape."""
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoint under {self.dir}")
         d = self.dir / f"step_{step}"
         manifest = json.loads((d / "manifest.json").read_text())
         leaves, treedef = _flatten_with_paths(tree_like)
+        specs = specs or {}
+        saved_specs = {m["name"]: m.get("shard") for m in manifest["leaves"]
+                       if m.get("shard")}
+        if saved_specs and not specs:
+            raise ValueError(
+                f"checkpoint step_{step} carries shard-laid-out leaves "
+                f"{sorted(saved_specs)} (specs {sorted(set(saved_specs.values()))}) "
+                f"but the restore target expects replicated state — a ZeRO "
+                f"(zero=True) checkpoint cannot restore into a replicated "
+                f"trainer; rebuild with zero=True or re-save replicated")
+        if specs and not saved_specs:
+            raise ValueError(
+                f"restore target expects shard-laid-out leaves "
+                f"{sorted(specs)} but checkpoint step_{step} holds replicated "
+                f"state — a replicated checkpoint cannot restore into a ZeRO "
+                f"(zero=True) trainer; rebuild without zero or re-save sharded")
+        for name in sorted(set(specs) | set(saved_specs)):
+            want, got = specs.get(name), saved_specs.get(name)
+            if got != want:
+                raise ValueError(
+                    f"leaf {name}: checkpoint shard spec {got!r} != expected "
+                    f"{want!r} — sharded layouts must match exactly (same DP "
+                    f"axes and carrier geometry) to restore")
         if len(leaves) != len(manifest["leaves"]):
             raise ValueError(
                 f"checkpoint has {len(manifest['leaves'])} leaves, target structure "

@@ -89,6 +89,13 @@ class CollectivePolicy:
     def all_to_all(self, x: jnp.ndarray, axis: str, axis_size: int) -> jnp.ndarray:
         return self._as_plan().all_to_all(x, axis, axis_size)
 
+    def reduce_scatter(self, x: jnp.ndarray, axis: str, axis_size: int) -> jnp.ndarray:
+        """One leg of the ZeRO three-phase schedule (plan-dispatched algo)."""
+        return self._as_plan().reduce_scatter(x, axis, axis_size)
+
+    def all_gather(self, chunk: jnp.ndarray, axis: str, axis_size: int) -> jnp.ndarray:
+        return self._as_plan().all_gather(chunk, axis, axis_size)
+
     # ------------------------------------------------------------ builders
     @staticmethod
     def from_plan(plan: CommPlan, calibration: Optional[object] = None) -> "CollectivePolicy":

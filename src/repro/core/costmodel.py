@@ -316,6 +316,7 @@ class OverlapEstimate:
     n_buckets: int
     chunks: int              # hierarchical pipeline depth used
     wire: str = "fp32/fp32"  # intra/inter wire formats the estimate priced
+    schedule: str = "allreduce"  # "allreduce" or "zero" (RS / update / AG)
 
 
 def pipeline_params_at_scale(model: CommModel, n_endpoints: int,
@@ -340,7 +341,8 @@ def exposed_comm_time(compute_time: float, plan, sizes,
                       model: Optional[CommModel] = None,
                       chunks: Optional[int] = None,
                       mechanism: str = "ccl",
-                      wire=None) -> OverlapEstimate:
+                      wire=None,
+                      schedule: str = "allreduce") -> OverlapEstimate:
     """Overlap-aware step-time predictor for the explicit-DP gradient path.
 
     `sizes` are the per-tensor gradient byte counts in forward layer order;
@@ -361,6 +363,17 @@ def exposed_comm_time(compute_time: float, plan, sizes,
     idealized format ratio — the runtime's inter leg stays fp32 today, so the
     inter figure is the planning bound, reported by dryrun next to the fp32
     realization.  Alpha terms stay put either way.
+
+    `schedule="zero"` prices the three-phase ZeRO path (reduce-scatter ->
+    sharded update -> all-gather) instead of the allreduce: the RS leg always
+    moves fp32 gradients, and only the AG (param return) leg pays the wire
+    format — at the *idealized* multiplier, because a shard all-gather moves
+    each 1/n shard exactly once (`realized_multiplier` is an allreduce-vs-
+    gather artifact and does not apply).  Hierarchical plans price it with
+    `overlap.zero_pipeline_time` (per-stage alpha-beta with the inter hop
+    carrying one RS and one AG share); flat plans as half an fp32 allreduce
+    plus half an allreduce at the AG wire — a ring allreduce *is* RS + AG, so
+    each leg costs half of it at its own format.
     """
     import dataclasses as _dc
 
@@ -378,11 +391,14 @@ def exposed_comm_time(compute_time: float, plan, sizes,
         in hw.SYSTEMS else "tpu_v5e")
     if n_endpoints is None:
         n_endpoints = int(plan.meta.get("n_endpoints", 0) or 0) or model.graph.n
+    if schedule not in ("allreduce", "zero"):
+        raise ValueError(f"unknown schedule {schedule!r}; "
+                         f"one of ('allreduce', 'zero')")
     sizes = [int(s) for s in sizes if int(s) > 0]
     wire_str = f"{wire.intra}/{wire.inter}"
     if not sizes:
         return OverlapEstimate(compute_time, 0.0, 0.0, compute_time, 1.0, 0, 1,
-                               wire_str)
+                               wire_str, schedule)
     bucket_cap = max(int(plan.bucket_bytes), 1)
     buckets = ov.make_buckets(sizes, bucket_cap)  # byte-granular, reverse order
     b_bytes = [float(b.n_elems) for b in buckets]
@@ -402,20 +418,42 @@ def exposed_comm_time(compute_time: float, plan, sizes,
             params = plan.pipeline_params()
         if params is None:
             params = pipeline_params_at_scale(model, n_endpoints, mechanism)
-        params = _dc.replace(
-            params,
-            wire_intra=realized_multiplier(wire.intra, params.n_ici),
-            wire_inter=wire.multiplier("inter"))
-        c = chunks if chunks is not None else ov.choose_chunks(bucket_cap, params)
-        c = max(int(c), 1)
-        comm_by_size = {b: ov.pipeline_time(b, c, params) for b in uniq}
+        if schedule == "zero":
+            # RS leg stays fp32 (wire_intra/wire_inter defaults); the AG leg
+            # alone carries the wire format, at the idealized ratio
+            c = chunks if chunks is not None else ov.choose_chunks(bucket_cap,
+                                                                   params)
+            c = max(int(c), 1)
+            comm_by_size = {
+                b: ov.zero_pipeline_time(b, c, params,
+                                         ag_intra=wire.multiplier("intra"),
+                                         ag_inter=wire.multiplier("inter"))
+                for b in uniq}
+        else:
+            params = _dc.replace(
+                params,
+                wire_intra=realized_multiplier(wire.intra, params.n_ici),
+                wire_inter=wire.multiplier("inter"))
+            c = chunks if chunks is not None else ov.choose_chunks(bucket_cap,
+                                                                   params)
+            c = max(int(c), 1)
+            comm_by_size = {b: ov.pipeline_time(b, c, params) for b in uniq}
     else:
         c = 1
         n_tier = min(n_endpoints, model.graph.n)
-        m_intra = realized_multiplier(wire.intra, n_tier)
-        comm_by_size = {
-            b: model.allreduce_intra(b * m_intra, mechanism, n=n_tier).seconds
-            for b in uniq}
+        if schedule == "zero":
+            # ring allreduce = RS + AG: half at fp32, half at the AG wire
+            comm_by_size = {
+                b: 0.5 * (model.allreduce_intra(b, mechanism, n=n_tier).seconds
+                          + model.allreduce_intra(b * wire.multiplier("intra"),
+                                                  mechanism, n=n_tier).seconds)
+                for b in uniq}
+        else:
+            m_intra = realized_multiplier(wire.intra, n_tier)
+            comm_by_size = {
+                b: model.allreduce_intra(b * m_intra, mechanism,
+                                         n=n_tier).seconds
+                for b in uniq}
     comm = [comm_by_size[b] for b in b_bytes]
     timeline = ov.bucket_schedule(compute_time, b_bytes, comm)
     total_comm = sum(comm)
@@ -424,7 +462,7 @@ def exposed_comm_time(compute_time: float, plan, sizes,
     hidden = 1.0 - exposed / total_comm if total_comm > 0 else 1.0
     return OverlapEstimate(compute_time, total_comm, exposed, step,
                            min(max(hidden, 0.0), 1.0), len(buckets), c,
-                           wire_str)
+                           wire_str, schedule)
 
 
 # Memoized system models: the scenario sweeps (`at_scale_suite`,

@@ -201,6 +201,107 @@ def chunked_hierarchical_all_reduce(x: jnp.ndarray, ici_axis: str, dcn_axis: str
     return out[: x.size].reshape(x.shape).astype(x.dtype)
 
 
+def two_tier_reduce_scatter(x: jnp.ndarray, ici_axis: str,
+                            dcn_axis: Optional[str] = None,
+                            n_chunks: int = 1,
+                            rs: Optional[Callable] = None) -> jnp.ndarray:
+    """Reduce-scatter of a 1-D row over one or two tiers — the first phase of
+    the ZeRO schedule (RS -> sharded update -> AG).
+
+    Single tier: one reduce-scatter over `ici_axis`; rank r owns chunk r of
+    the row.  Two tiers: an intra reduce-scatter feeds an inter one, so the
+    device at (i, j) owns block `i * n_dcn + j` of the row split into
+    `n_ici * n_dcn` blocks.  With `n_chunks > 1` the row is chunked and the
+    inter RS of chunk t-1 is issued concurrently with the intra RS of chunk t
+    (the two issues are data-independent) — the RS half of the chunked
+    hierarchical pipeline.  The returned shard is the *concatenation of
+    per-chunk blocks* (shard-major layout); `two_tier_all_gather` mirrors the
+    chunking exactly, so the round trip restores row order.
+
+    `rs(values, axis_name)` defaults to the ring algorithm; pass a plan
+    dispatcher to route each leg through the planned per-size algorithm.  The
+    caller guarantees `x.size` is divisible by `n_chunks * n_ici * n_dcn`.
+    """
+    rs = rs or (lambda v, ax: coll.ring_reduce_scatter(v, ax))
+    if dcn_axis is None:
+        return rs(x, ici_axis)
+    n_chunks = max(int(n_chunks), 1)
+    chunks = x.reshape(n_chunks, -1)
+    intra: List[Optional[jnp.ndarray]] = [None] * n_chunks
+    out: List[Optional[jnp.ndarray]] = [None] * n_chunks
+    for t in range(n_chunks + 1):
+        # oldest-first within a stage: the inter tier scatters chunk t-1
+        # while the intra tier reduces chunk t
+        if 0 <= t - 1 < n_chunks:
+            out[t - 1] = rs(intra[t - 1], dcn_axis)
+        if t < n_chunks:
+            intra[t] = rs(chunks[t], ici_axis)
+    return jnp.concatenate(out) if n_chunks > 1 else out[0]
+
+
+def two_tier_all_gather(shard: jnp.ndarray, ici_axis: str,
+                        dcn_axis: Optional[str] = None,
+                        n_chunks: int = 1,
+                        ag: Optional[Callable] = None) -> jnp.ndarray:
+    """All-gather of a `two_tier_reduce_scatter` shard back into the full row
+    — the return phase of the ZeRO schedule (updated params to every device).
+
+    Gathers run in the inverse tier order of the RS (inter first, then intra)
+    with the same chunking, so the concatenated output is in original row
+    order.  With `n_chunks > 1` the intra gather of chunk t-1 drains while
+    the inter tier gathers chunk t.  `ag(values, axis_name)` must return the
+    (n, ...) rank-ordered stack (the ring/xla all-gather contract); it
+    defaults to the ring algorithm.
+    """
+    ag = ag or coll.ring_all_gather
+    if dcn_axis is None:
+        return ag(shard, ici_axis).reshape(-1)
+    n_chunks = max(int(n_chunks), 1)
+    sub = shard.reshape(n_chunks, -1)
+    inner: List[Optional[jnp.ndarray]] = [None] * n_chunks
+    out: List[Optional[jnp.ndarray]] = [None] * n_chunks
+    for t in range(n_chunks + 1):
+        if 0 <= t - 1 < n_chunks:
+            out[t - 1] = ag(inner[t - 1], ici_axis).reshape(-1)
+        if t < n_chunks:
+            inner[t] = ag(sub[t], dcn_axis).reshape(-1)
+    return jnp.concatenate(out) if n_chunks > 1 else out[0]
+
+
+def quantized_all_gather(q_shard: jnp.ndarray, scale: jnp.ndarray,
+                         ici_axis: str, dcn_axis: Optional[str] = None,
+                         n_chunks: int = 1) -> jnp.ndarray:
+    """Wire-compressed return leg of the ZeRO schedule: gather the int8 param
+    shards (+ one fp32 scale per shard) over one or two tiers and dequantize
+    only after the full gather -> the fp32 full row.
+
+    Every device — including each shard's owner — uses the *dequantized*
+    values for every shard, so parameters stay bit-identically replicated
+    across the mesh (an owner that kept its exact fp32 shard would silently
+    diverge from its peers).  Unlike the gradient wire there is no error
+    feedback: the same int8 payload rides both tiers unchanged, so the only
+    error is the single quantization step.  With `n_chunks > 1` the intra
+    gather of chunk t-1 overlaps the inter gather of chunk t; the per-shard
+    scale covers all chunks of that shard.
+    """
+    if dcn_axis is None:
+        qg = lax.all_gather(q_shard, ici_axis)            # (n, S) int8 wire
+        sg = lax.all_gather(scale, ici_axis)              # (n,) fp32 scales
+        return (qg.astype(jnp.float32) * sg[:, None]).reshape(-1)
+    sg = lax.all_gather(lax.all_gather(scale, dcn_axis), ici_axis)  # (n, n_dcn)
+    n_chunks = max(int(n_chunks), 1)
+    sub = q_shard.reshape(n_chunks, -1)
+    inner: List[Optional[jnp.ndarray]] = [None] * n_chunks
+    out: List[Optional[jnp.ndarray]] = [None] * n_chunks
+    for t in range(n_chunks + 1):
+        if 0 <= t - 1 < n_chunks:
+            g = lax.all_gather(inner[t - 1], ici_axis)    # (n, n_dcn, sc) i8
+            out[t - 1] = (g.astype(jnp.float32) * sg[:, :, None]).reshape(-1)
+        if t < n_chunks:
+            inner[t] = lax.all_gather(sub[t], dcn_axis)   # (n_dcn, sc) int8
+    return jnp.concatenate(out) if n_chunks > 1 else out[0]
+
+
 def quantized_all_reduce(q: jnp.ndarray, scale: jnp.ndarray, ici_axis: str,
                          dcn_axis: Optional[str] = None,
                          n_chunks: int = 1) -> jnp.ndarray:
@@ -268,6 +369,34 @@ class PipelineParams:
         t_ag = t_rs
         t_ar = self.alpha_dcn + (chunk_bytes * self.wire_inter / n) / self.bw_dcn
         return t_rs, t_ar, t_ag
+
+    def zero_stage_times(self, chunk_bytes: float, ag_intra: float = 1.0,
+                         ag_inter: float = 1.0) -> Tuple[float, float, float]:
+        """(intra RS, inter RS+AG, intra AG) seconds per chunk of the
+        three-phase ZeRO schedule.  The reduce legs stay fp32 (partial sums
+        must not be requantized); `ag_intra`/`ag_inter` are the bytes-on-wire
+        multipliers of the param all-gather legs — *idealized* ratios, because
+        the shard gather moves each shard exactly once (unlike the gradient
+        gather wire, `wire.realized_multiplier` does not apply)."""
+        n = max(self.n_ici, 2)
+        frac = (n - 1) / n
+        t_rs = (n - 1) * self.alpha_ici \
+            + chunk_bytes * self.wire_intra * frac / self.bw_ici
+        t_inter = 2 * self.alpha_dcn \
+            + (chunk_bytes * (self.wire_inter + ag_inter) / n) / self.bw_dcn
+        t_ag = (n - 1) * self.alpha_ici \
+            + chunk_bytes * ag_intra * frac / self.bw_ici
+        return t_rs, t_inter, t_ag
+
+
+def zero_pipeline_time(nbytes: float, n_chunks: int, params: PipelineParams,
+                       ag_intra: float = 1.0, ag_inter: float = 1.0) -> float:
+    """Pipelined three-phase ZeRO schedule time for `nbytes` split into
+    `n_chunks` chunks (fill + steady state paced by the slowest stage), the
+    RS/update/AG analog of `pipeline_time`."""
+    n_chunks = max(int(n_chunks), 1)
+    ts = params.zero_stage_times(nbytes / n_chunks, ag_intra, ag_inter)
+    return sum(ts) + (n_chunks - 1) * max(ts)
 
 
 def pipeline_time(nbytes: float, n_chunks: int, params: PipelineParams) -> float:

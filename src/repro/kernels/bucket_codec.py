@@ -297,6 +297,112 @@ def _unpack_pallas(table: CodecTable, carrier, like,
     return result
 
 
+# ------------------------------------------------- fused sharded AdamW update
+def _adamw_shard_xla(g, p, m, v, clip, lr, bc1, bc2, b1, b2, eps, wd, wire):
+    g = g * clip
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    mhat = m / bc1
+    vhat = v / bc2
+    delta = mhat / (jnp.sqrt(vhat) + eps) + wd * p
+    p_new = p - lr * delta
+    if wire == "int8":
+        s = jnp.maximum(jnp.max(jnp.abs(p_new), axis=1), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(p_new / s[:, None]), -127, 127).astype(jnp.int8)
+        return q, s, m, v
+    return p_new.astype(WIRE_DTYPES[wire]), None, m, v
+
+
+def _adamw_shard_kernel(*refs, b1, b2, eps, wd, wire):
+    g_ref, p_ref, m_ref, v_ref, sc_ref = refs[:5]
+    outs = refs[5:]
+    clip, lr = sc_ref[0, 0], sc_ref[0, 1]
+    bc1, bc2 = sc_ref[0, 2], sc_ref[0, 3]
+    g = g_ref[...] * clip
+    m = b1 * m_ref[...] + (1 - b1) * g
+    v = b2 * v_ref[...] + (1 - b2) * g * g
+    delta = (m / bc1) / (jnp.sqrt(v / bc2) + eps) + wd * p_ref[...]
+    p_new = p_ref[...] - lr * delta
+    if wire == "int8":
+        p_out, s_out, m_out, v_out = outs
+        s = jnp.maximum(jnp.max(jnp.abs(p_new)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(p_new / s), -127, 127)
+        p_out[...] = q.astype(jnp.int8)
+        s_out[0, 0] = s
+    else:
+        p_out, m_out, v_out = outs
+        p_out[...] = p_new.astype(p_out.dtype)
+    m_out[...] = m
+    v_out[...] = v
+
+
+def _adamw_shard_pallas(g, p, m, v, scalars, b1, b2, eps, wd, wire,
+                        interpret: bool):
+    nb, sh = g.shape
+    row = pl.BlockSpec((1, sh), lambda k: (k, 0))
+    in_specs = [row, row, row, row, pl.BlockSpec((1, 4), lambda k: (0, 0))]
+    out_shape = [jax.ShapeDtypeStruct((nb, sh), WIRE_DTYPES[wire])]
+    out_specs = [row]
+    if wire == "int8":
+        out_shape.append(jax.ShapeDtypeStruct((nb, 1), jnp.float32))
+        out_specs.append(pl.BlockSpec((1, 1), lambda k: (k, 0)))
+    out_shape += [jax.ShapeDtypeStruct((nb, sh), jnp.float32)] * 2
+    out_specs += [row, row]
+    kernel = functools.partial(_adamw_shard_kernel, b1=b1, b2=b2, eps=eps,
+                               wd=wd, wire=wire)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(g, p, m, v, scalars)
+    if wire == "int8":
+        q, s, new_m, new_v = out
+        return q, s[:, 0], new_m, new_v
+    p_wire, new_m, new_v = out
+    return p_wire, None, new_m, new_v
+
+
+def adamw_update_shard(g: jnp.ndarray, p: jnp.ndarray, m: jnp.ndarray,
+                       v: jnp.ndarray, *, clip, lr, bc1, bc2,
+                       b1: float, b2: float, eps: float, weight_decay: float,
+                       wire: str = "fp32", impl: str = "auto"):
+    """Fused sharded AdamW: one device's `(n_buckets, shard_elems)` carrier
+    shards of (reduced gradient, param, m, v) -> (p_wire, p_scales, new_m,
+    new_v) — the ZeRO update between the reduce-scatter and the all-gather.
+
+    Elementwise math is *identical* to `optim.adamw.apply_updates` (same op
+    order, so fp32 results are bit-for-bit): `clip` is the global-norm clip
+    factor (already psum-combined across shards by the caller), `lr` the
+    scheduled rate, `bc1`/`bc2` the bias corrections — all traced scalars;
+    `b1`/`b2`/`eps`/`weight_decay` are static.  Zero-padded carrier columns
+    are stable: g = p = m = v = 0 gives delta = 0, so pads stay zero through
+    any number of steps.
+
+    `wire` is the all-gather leg's format: fp32/bf16 cast `p_new` (scales is
+    None); int8 requantizes per bucket-shard with symmetric scales — the
+    sideband the gather moves is one fp32 scale per (bucket, device) shard.
+    Moments always stay fp32 and carrier-sharded.
+    """
+    if wire not in WIRE_DTYPES:
+        raise ValueError(f"unknown wire format {wire!r}; "
+                         f"one of {sorted(WIRE_DTYPES)}")
+    if _resolve_impl(impl) == "pallas":
+        scalars = jnp.stack([jnp.asarray(clip, jnp.float32),
+                             jnp.asarray(lr, jnp.float32),
+                             jnp.asarray(bc1, jnp.float32),
+                             jnp.asarray(bc2, jnp.float32)]).reshape(1, 4)
+        return _adamw_shard_pallas(g, p, m, v, scalars, b1, b2, eps,
+                                   weight_decay, wire,
+                                   interpret=jax.default_backend() != "tpu")
+    return _adamw_shard_xla(g, p, m, v, clip, lr, bc1, bc2, b1, b2, eps,
+                            weight_decay, wire)
+
+
 # ------------------------------------------------------------------- public
 def pack(table: CodecTable, flat_g: Sequence[jnp.ndarray], *,
          scale: float = 1.0, wire: str = "fp32",

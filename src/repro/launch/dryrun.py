@@ -149,7 +149,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         if shape.kind == "train":
             from ..core.commplan import CommPlan
             from ..core.costmodel import exposed_comm_time
-            from ..core.wire import bytes_on_wire
+            from ..core.wire import bytes_on_wire, zero_wire_bytes
             topo = topology.make_tpu_multipod() if multi_pod else topology.make_tpu_pod()
             plan = CommPlan.from_topology(topo)
             grad_sizes = [int(a.size) * 4 for a in
@@ -162,6 +162,24 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             wspec = plan.wire_spec()
             grad_bytes = float(sum(grad_sizes))
             n_buckets = max(est.n_buckets, 1)
+            # ZeRO (RS -> sharded AdamW -> AG) variant: the three-phase
+            # schedule priced by the same predictor, plus the memory and
+            # wire-byte headlines — fp32 m/v shrink by the DP degree, and
+            # the AG leg's wire format sets the planned DP bytes
+            est_z = exposed_comm_time(t_comp, plan, grad_sizes,
+                                      n_endpoints=n_dev, wire="plan",
+                                      schedule="zero")
+            ag_fmt = wspec.inter if multi_pod else wspec.intra
+            zwb = zero_wire_bytes(grad_bytes, n_dev, ag_fmt=ag_fmt,
+                                  n_buckets=n_buckets)
+            overlap_terms_zero = dict(
+                exposed_comm_zero_s=est_z.exposed_s,
+                step_time_zero_s=t_comp + est_z.exposed_s,
+                opt_state_bytes=2.0 * grad_bytes,
+                opt_state_bytes_zero=2.0 * grad_bytes / n_dev,
+                dp_wire_bytes_planned_zero=zwb["total"],
+                dp_wire_ratio_zero=zwb["ratio"],
+            )
             overlap_terms = dict(
                 exposed_comm_s=est.exposed_s,
                 hidden_comm_fraction=est.hidden_fraction,
@@ -174,6 +192,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                 dp_wire_bytes_planned=bytes_on_wire(
                     grad_bytes, wspec.inter if multi_pod else wspec.intra,
                     n_buckets),
+                **overlap_terms_zero,
             )
         cell.update(
             status="ok",

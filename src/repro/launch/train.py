@@ -5,7 +5,7 @@
       [--residual-shard] [--fused-qkv] [--policy artifacts/policy.json] \
       [--calibration artifacts/bench/calibration.json] \
       [--explicit-dp] [--bucket-bytes N] [--overlap] [--chunks C] \
-      [--compress-bits {0,8,auto}]
+      [--compress-bits {0,8,auto}] [--zero]
 
 On this CPU container use --reduced (full configs are exercised via the dry-run).
 The mesh string "DxM" builds (data=D, model=M) over the available devices;
@@ -80,6 +80,13 @@ def main(argv=None):
     ap.add_argument("--chunks", type=int, default=None,
                     help="hierarchical pipeline depth for --overlap (default: "
                          "chosen from the plan's per-tier alpha-beta fits)")
+    ap.add_argument("--zero", action="store_true",
+                    help="ZeRO-style sharded optimizer (implies --explicit-dp): "
+                         "reduce-scatter the packed gradient carrier, AdamW "
+                         "over each device's shard (fp32 m/v carrier-sharded, "
+                         "optimizer memory / DP degree), all-gather updated "
+                         "params at the wire dtype; --compress-bits 8 makes "
+                         "the all-gather leg int8")
     ap.add_argument("--straggler-threshold", type=float, default=2.5)
     args = ap.parse_args(argv)
 
@@ -98,8 +105,8 @@ def main(argv=None):
     if shape.kind != "train":
         raise SystemExit(f"--shape {args.shape} is a {shape.kind} shape; use launch.serve")
 
-    if args.overlap:
-        args.explicit_dp = True  # overlap is an explicit-DP execution mode
+    if args.overlap or args.zero:
+        args.explicit_dp = True  # both are explicit-DP execution modes
     # explicit-DP wants a pure-DP default mesh (model dim 1)
     mesh = parse_mesh(args.mesh) if args.mesh \
         else make_host_mesh(model=1 if args.explicit_dp else 0)
@@ -161,15 +168,22 @@ def main(argv=None):
         from ..core.autotune import CollectivePolicy as _CP
         from ..core.wire import gather_wins
         wire = (policy or _CP.from_model()).wire
-        realizable = args.explicit_dp and (
-            (wire.intra != "fp32") if dcn_axis is not None
-            else wire.compresses)
-        # the realized int8 gather must also win at the mesh's actual gather
-        # axis size — above 8 endpoints it moves more bytes than fp32.
-        # Without --explicit-dp there is no wire to compress: auto resolves
-        # to 0 (only a literal 8 hard-errors below).
-        n_gather = mesh.shape.get("data", 1) if mesh is not None else 1
-        realizable = realizable and gather_wins(n_gather)
+        if args.zero:
+            # the ZeRO all-gather (param return) leg realizes the *idealized*
+            # multiplier at any endpoint count — each device contributes its
+            # 1/n shard exactly once — so there is no gather_wins gate: any
+            # planned lossy tier is worth compressing.
+            realizable = args.explicit_dp and wire.compresses
+        else:
+            realizable = args.explicit_dp and (
+                (wire.intra != "fp32") if dcn_axis is not None
+                else wire.compresses)
+            # the realized int8 gather must also win at the mesh's actual
+            # gather axis size — above 8 endpoints it moves more bytes than
+            # fp32.  Without --explicit-dp there is no wire to compress: auto
+            # resolves to 0 (only a literal 8 hard-errors below).
+            n_gather = mesh.shape.get("data", 1) if mesh is not None else 1
+            realizable = realizable and gather_wins(n_gather)
         compress_bits = 8 if realizable else 0
         print(f"wire: {wire.intra}/{wire.inter} -> compress_bits={compress_bits}")
     else:
@@ -191,7 +205,7 @@ def main(argv=None):
                     explicit_dp=args.explicit_dp, dcn_axis=dcn_axis,
                     policy=policy, bucket_bytes=args.bucket_bytes,
                     overlap=args.overlap, chunks=args.chunks,
-                    compress_bits=compress_bits),
+                    compress_bits=compress_bits, zero=args.zero),
         mesh=mesh,
     )
     result = trainer.run(resume=args.resume)

@@ -146,7 +146,8 @@ def build_explicit_dp_step(model: Model, opt: adamw.OptConfig, mesh, axis: str =
                            dcn_axis: Optional[str] = None,
                            overlap: bool = False,
                            microbatches: int = 1,
-                           chunks: Optional[int] = None) -> Callable:
+                           chunks: Optional[int] = None,
+                           zero: bool = False) -> Callable:
     """Pure-DP train step under shard_map with explicit gradient collectives.
 
     Params/opt state replicated; batch sharded on `axis` (and `dcn_axis` when
@@ -189,6 +190,28 @@ def build_explicit_dp_step(model: Model, opt: adamw.OptConfig, mesh, axis: str =
     pipeline depth from the plan's per-tier alpha-beta fits
     (`plan.pipeline_chunks`).
 
+    ZeRO (`zero=True`): the bucket schedule switches from all-reduce +
+    replicated AdamW to the three-phase **reduce-scatter of the packed carrier
+    -> sharded AdamW over each device's carrier shard -> all-gather of updated
+    params** — the reduce leg moves each gradient byte once per shard instead
+    of twice, and the fp32 moments live carrier-sharded (optimizer memory
+    divided by the DP degree; the returned step exposes
+    `step.init_opt_state(params)` / `step.abstract_opt_state(params)` for the
+    sharded state).  Global-norm clipping stays exact: the per-shard sum of
+    squares is psum-combined over the dp axes before the clip factor forms —
+    which also makes all-RS-before-any-update a semantic barrier, so the
+    overlap the schedule can legally express is the RS stream against the
+    backward (scan-carried, microbatch-pipelined) and the chunked two-tier
+    interleave inside each leg, not AG(k) against RS(k+1).  The update itself
+    is the fused dequant+AdamW+requantize shard kernel
+    (`bucket_codec.adamw_update_shard`); with `compress_bits=8` the AG leg
+    carries int8 + one scale per bucket-shard and every device (including the
+    shard owner) uses the dequantized values, keeping params bit-identically
+    replicated.  The codec is the single gradient *and* parameter
+    materialization point; `err` passes through untouched (no error feedback
+    on the param leg — the same payload rides every tier, so the only error
+    is the single quantization step).
+
     The returned step exposes `step.init_error_state(params)` — carrier-shaped
     zeros when compression rides buckets, per-leaf zeros otherwise.
     """
@@ -210,13 +233,18 @@ def build_explicit_dp_step(model: Model, opt: adamw.OptConfig, mesh, axis: str =
         raise ValueError("overlap=True requires bucketing; per-tensor "
                          "reduction (bucket_bytes=0) is not supported — omit "
                          "bucket_bytes to use the plan's crossover")
+    if zero and bucket_bytes == 0:
+        raise ValueError("zero=True shards the packed carrier; per-tensor "
+                         "reduction (bucket_bytes=0) is not supported — omit "
+                         "bucket_bytes to use the plan's crossover")
     if bucket_bytes is None:
         # plain compress_bits (no overlap, no explicit bucket size) keeps the
         # legacy per-tensor wire; bucketed compression opts in via
-        # bucket_bytes/overlap
-        bucket_bytes = 0 if (compress_bits and not overlap) \
+        # bucket_bytes/overlap (zero is always bucketed: the carrier is the
+        # thing being sharded)
+        bucket_bytes = 0 if (compress_bits and not overlap and not zero) \
             else getattr(policy, "bucket_bytes", 0)
-    if overlap and not bucket_bytes:
+    if (overlap or zero) and not bucket_bytes:
         bucket_bytes = 4 << 20  # policy carried no crossover (legacy tables)
     bucketed = bucket_bytes > 0
     loss_axes = (dcn_axis, axis) if dcn_axis is not None else axis
@@ -227,6 +255,148 @@ def build_explicit_dp_step(model: Model, opt: adamw.OptConfig, mesh, axis: str =
                                              dcn_axis is not None) else 1
     chunks = max(int(chunks), 1)
     bucket_elems = max(bucket_bytes // 4, 1)
+
+    # ----------------------------------------------------------------- zero
+    # carrier geometry of the three-phase schedule: rows are column-padded so
+    # every bucket splits evenly into n_chunks chunks of n_ici * n_dcn shard
+    # blocks (zeros are the reduction identity AND an AdamW fixed point, so
+    # the pad stays zero forever).  The device at (axis=i, dcn=j) owns block
+    # i * n_dcn + j of each chunk; its shard is the concatenation of its
+    # per-chunk blocks (shard-major layout, mirrored exactly by the AG).
+    n_dcn = mesh.shape[dcn_axis] if dcn_axis is not None else 1
+    zero_chunks = chunks if dcn_axis is not None else 1
+    shard_unit = zero_chunks * n * n_dcn
+    shard_axes = (axis,) if dcn_axis is None else (axis, dcn_axis)
+    zero_wire = "int8" if compress_bits == 8 else "fp32"
+
+    def zero_geometry(sizes):
+        table = codec.make_table(sizes, bucket_elems, reverse=bool(overlap))
+        padded = -(-table.bucket_elems // shard_unit) * shard_unit
+        return table, padded
+
+    def pad_cols(carrier, padded):
+        if padded > carrier.shape[1]:
+            carrier = jnp.concatenate(
+                [carrier, jnp.zeros((carrier.shape[0],
+                                     padded - carrier.shape[1]),
+                                    carrier.dtype)], axis=1)
+        return carrier
+
+    def zero_rs(row):
+        return ov.two_tier_reduce_scatter(
+            row, axis, dcn_axis, n_chunks=zero_chunks,
+            rs=lambda v, ax: policy.reduce_scatter(v, ax, mesh.shape[ax]))
+
+    def zero_ag(shard):
+        return ov.two_tier_all_gather(
+            shard, axis, dcn_axis, n_chunks=zero_chunks,
+            ag=lambda v, ax: policy.all_gather(v, ax, mesh.shape[ax]))
+
+    def zero_ag_q(shard_and_scale):
+        q_row, s_row = shard_and_scale
+        return ov.quantized_all_gather(q_row, s_row, axis, dcn_axis=dcn_axis,
+                                       n_chunks=zero_chunks)
+
+    def zero_step(params, opt_state, batch, err):
+        flat_p, tdef = jax.tree.flatten(params)
+        table, padded = zero_geometry([p.size for p in flat_p])
+        nb = table.n_buckets
+        step_no = opt_state["step"] + 1
+        lr = adamw.schedule(step_no, opt)
+        if nb == 0:  # every parameter leaf is zero-size: nothing on the wire
+            loss = jax.lax.pmean(model.loss(params, batch), loss_axes)
+            metrics = {"grad_norm": jnp.zeros((), jnp.float32), "lr": lr,
+                       "loss": loss}
+            return params, {"m": opt_state["m"], "v": opt_state["v"],
+                            "step": step_no}, metrics, err
+        cap = table.bucket_elems
+        shard_elems = padded // (n * n_dcn)
+        inv = 1.0 / (n_total * microbatches)
+
+        def grads_of(b):
+            loss, grads = jax.value_and_grad(model.loss)(params, b)
+            flat, _ = jax.tree.flatten(grads)
+            # same canonical-materialization barrier as the allreduce paths
+            return loss, jax.lax.optimization_barrier(flat)
+
+        def pack_pad(flat):
+            carrier, _, _ = codec.pack(table, flat, scale=inv)
+            return pad_cols(carrier, padded)
+
+        if microbatches == 1:
+            loss, flat_g = grads_of(batch)
+            carrier = pack_pad(flat_g)
+            if overlap:
+                # scan-carried RS stream: one bucket's reduce-scatter in
+                # flight at a time, in backward materialization order
+                g_shard = ov.scan_bucket_reduce(carrier, zero_rs)
+            else:
+                g_shard = jnp.stack([zero_rs(carrier[k]) for k in range(nb)])
+        else:
+            mb = _microbatch(batch, microbatches)
+            mb0 = jax.tree.map(lambda a: a[0], mb)
+            rest = jax.tree.map(lambda a: a[1:], mb)
+            loss0, flat0 = grads_of(mb0)
+            pending0 = pack_pad(flat0)
+
+            def body(carry, b):
+                acc, pending, lsum = carry
+                # previous microbatch's reduce-scatters are issued FIRST (no
+                # dependency on this backward) so they overlap it; shards are
+                # accumulated — 1/n of the accumulator an all-reduce carries
+                red = jnp.stack([zero_rs(pending[k]) for k in range(nb)])
+                loss, flat = grads_of(b)
+                return (acc + red, pack_pad(flat), lsum + loss), None
+
+            init = (jnp.zeros((nb, shard_elems), jnp.float32), pending0,
+                    loss0)
+            (acc, pending, lsum), _ = jax.lax.scan(body, init, rest)
+            final = jnp.stack([zero_rs(pending[k]) for k in range(nb)])
+            g_shard = acc + final
+            loss = lsum / microbatches
+        loss = jax.lax.pmean(loss, loss_axes)
+
+        # exact global-norm clipping: the per-shard sum of squares is
+        # psum-combined over the dp axes before the clip factor forms.  This
+        # is also the schedule's semantic barrier — no shard may update until
+        # every bucket's reduce-scatter has landed.
+        gsq = jax.lax.psum(jnp.sum(jnp.square(g_shard)), loss_axes)
+        gnorm = jnp.sqrt(gsq)
+        clip = jnp.minimum(1.0, opt.clip_norm / (gnorm + 1e-9))
+        bc1 = 1 - opt.b1 ** step_no.astype(jnp.float32)
+        bc2 = 1 - opt.b2 ** step_no.astype(jnp.float32)
+
+        # params ride the same codec: pack (casts to fp32), pad, slice this
+        # device's shard-major blocks out of each chunk
+        p_carrier = pad_cols(codec.pack(table, flat_p)[0], padded)
+        ix = jax.lax.axis_index(axis) * n_dcn + (
+            jax.lax.axis_index(dcn_axis) if dcn_axis is not None else 0)
+        sub = shard_elems // zero_chunks
+        p_shard = jax.lax.dynamic_slice(
+            p_carrier.reshape(nb, zero_chunks, padded // zero_chunks),
+            (0, 0, ix * sub), (nb, zero_chunks, sub)).reshape(nb, shard_elems)
+
+        p_wire, p_scales, new_m, new_v = codec.adamw_update_shard(
+            g_shard, p_shard, opt_state["m"], opt_state["v"],
+            clip=clip, lr=lr, bc1=bc1, bc2=bc2, b1=opt.b1, b2=opt.b2,
+            eps=opt.eps, weight_decay=opt.weight_decay, wire=zero_wire)
+
+        if zero_wire == "int8":
+            if overlap:
+                full = ov.scan_bucket_reduce((p_wire, p_scales), zero_ag_q)
+            else:
+                full = jnp.stack([zero_ag_q((p_wire[k], p_scales[k]))
+                                  for k in range(nb)])
+        elif overlap:
+            full = ov.scan_bucket_reduce(p_wire, zero_ag)
+        else:
+            full = jnp.stack([zero_ag(p_wire[k]) for k in range(nb)])
+        new_flat = codec.unpack(table, full[:, :cap], flat_p)
+        new_params = tdef.unflatten(
+            [r.astype(p.dtype) for r, p in zip(new_flat, flat_p)])
+        metrics = {"grad_norm": gnorm, "lr": lr, "loss": loss}
+        return new_params, {"m": new_m, "v": new_v, "step": step_no}, \
+            metrics, err
 
     def reduce_bucket(buf):
         """One packed fp32 bucket through the planned reduction: the chunked
@@ -432,11 +602,19 @@ def build_explicit_dp_step(model: Model, opt: adamw.OptConfig, mesh, axis: str =
         from jax import shard_map
         batch_axes = (dcn_axis, axis) if dcn_axis is not None else axis
         p_spec = specs_like(params, P())
-        o_spec = specs_like(opt_state, P())
+        if zero:
+            # fp32 moments are carrier-sharded on their column axis: each
+            # device holds (n_buckets, padded / (n * n_dcn)) — optimizer
+            # memory divided by the DP degree — and steady-state steps pass
+            # the sharded arrays straight back in (no resharding)
+            mv_spec = P(None, shard_axes)
+            o_spec = {"m": mv_spec, "v": mv_spec, "step": P()}
+        else:
+            o_spec = specs_like(opt_state, P())
         b_spec = specs_like(batch, P(batch_axes))
         e_spec = specs_like(err, P())
         m_spec = {"grad_norm": P(), "lr": P(), "loss": P()}
-        return shard_map(local_step, mesh=mesh,
+        return shard_map(zero_step if zero else local_step, mesh=mesh,
                          in_specs=(p_spec, o_spec, b_spec, e_spec),
                          out_specs=(p_spec, o_spec, m_spec, e_spec),
                          check_vma=False)
@@ -454,7 +632,10 @@ def build_explicit_dp_step(model: Model, opt: adamw.OptConfig, mesh, axis: str =
     # paths pass err through untouched, where donation would only forbid
     # callers from reusing it for no win — so it is gated on compress_bits.
     cache: Dict[Tuple, Callable] = {}
-    donate = (3,) if compress_bits else ()
+    # zero mode never donates: err passes through untouched (no error
+    # feedback on the param leg), and the parity tests legitimately reuse one
+    # opt_state across several step builders
+    donate = (3,) if (compress_bits and not zero) else ()
 
     def step(params, opt_state, batch, err):
         key = tuple(jax.tree.structure(t)
@@ -468,7 +649,11 @@ def build_explicit_dp_step(model: Model, opt: adamw.OptConfig, mesh, axis: str =
     def make_error_state(params):
         """Zeros of this step's error-feedback state: a carrier-shaped
         (n_buckets, bucket_elems) fp32 buffer when compression rides buckets,
-        per-leaf zeros otherwise (the per-tensor legacy wire)."""
+        per-leaf zeros otherwise (the per-tensor legacy wire).  The zero path
+        carries no error feedback (the param leg's payload rides every tier
+        unchanged), so its state is a placeholder scalar."""
+        if zero:
+            return jnp.zeros((), jnp.float32)
         if compress_bits == 8 and bucketed:
             sizes = [p.size for p in jax.tree.leaves(params)]
             table = codec.make_table(sizes, bucket_elems,
@@ -477,8 +662,42 @@ def build_explicit_dp_step(model: Model, opt: adamw.OptConfig, mesh, axis: str =
                              jnp.float32)
         return init_error_state(params)
 
+    def _param_sizes(params):
+        import math as _math
+        return [int(_math.prod(p.shape)) for p in jax.tree.leaves(params)]
+
+    def make_opt_state(params):
+        """Carrier-sharded optimizer state of the zero path: fp32 moments of
+        shape (n_buckets, padded_bucket_elems) whose columns the step's
+        in_specs shard over the dp axes (memory per device = full / DP)."""
+        if not zero:
+            return adamw.init_opt_state(params)
+        table, padded = zero_geometry(_param_sizes(params))
+        nb = max(table.n_buckets, 1)
+        return {"m": jnp.zeros((nb, padded), jnp.float32),
+                "v": jnp.zeros((nb, padded), jnp.float32),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def make_abstract_opt_state(params):
+        """ShapeDtypeStructs of `make_opt_state` (checkpoint restore target).
+        `params` may be abstract or concrete."""
+        if not zero:
+            return adamw.abstract_opt_state(params)
+        table, padded = zero_geometry(_param_sizes(params))
+        mv = jax.ShapeDtypeStruct((max(table.n_buckets, 1), padded),
+                                  jnp.float32)
+        return {"m": mv, "v": mv,
+                "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
     step._cache = cache  # introspectable by tests
     step.init_error_state = make_error_state
+    step.init_opt_state = make_opt_state
+    step.abstract_opt_state = make_abstract_opt_state
+    step.zero = zero
+    # checkpoint shard-spec tag of the carrier-sharded moments: records the
+    # sharded layout in the manifest so a replicated restore fails loudly
+    step.opt_shard_spec = "zero-carrier:" + ",".join(shard_axes) if zero \
+        else None
     return step
 
 

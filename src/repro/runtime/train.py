@@ -58,6 +58,11 @@ class TrainConfig:
     # mesh buckets run the chunked hierarchical pipeline
     overlap: bool = False
     chunks: Optional[int] = None          # None = plan's per-tier alpha-beta fit
+    # ZeRO-style sharded optimizer (runtime.steps): reduce-scatter the packed
+    # carrier, AdamW over each device's shard (fp32 m/v carrier-sharded, so
+    # optimizer memory drops by the DP degree), all-gather updated params at
+    # the wire dtype.  Implies explicit_dp + bucketed carrier.
+    zero: bool = False
 
 
 class Trainer:
@@ -85,6 +90,10 @@ class Trainer:
                                  "got mesh=None (single-device host?)")
             self._build_explicit_dp(mesh)
             return
+        if self.cfg.zero:
+            raise ValueError("zero=True requires the explicit-DP path "
+                             "(explicit_dp=True / launch.train --zero)")
+        self._dp_step = None
         self.model = build_model(self.model_cfg, mesh)
         self.bundle = rsteps.train_step_bundle(self.model, self.shape, self.opt,
                                                microbatches=self.cfg.microbatches)
@@ -114,7 +123,9 @@ class Trainer:
             self.model, self.opt, mesh, c.dp_axis, policy=c.policy,
             bucket_bytes=c.bucket_bytes, dcn_axis=c.dcn_axis,
             overlap=c.overlap, chunks=c.chunks,
-            microbatches=c.microbatches, compress_bits=c.compress_bits)
+            microbatches=c.microbatches, compress_bits=c.compress_bits,
+            zero=c.zero)
+        self._dp_step = dp_step
         self._dp_err = None
 
         def step_fn(params, opt_state, batch):
@@ -129,7 +140,12 @@ class Trainer:
 
     def init_state(self, seed: int = 0):
         params = self.model.init(jax.random.PRNGKey(seed))
-        opt_state = adamw.init_opt_state(params)
+        if self._dp_step is not None and getattr(self._dp_step, "zero", False):
+            # carrier-sharded m/v: (n_buckets, padded_elems) fp32, laid out by
+            # the step's codec table (runtime.steps.make_opt_state)
+            opt_state = self._dp_step.init_opt_state(params)
+        else:
+            opt_state = adamw.init_opt_state(params)
         if self.model.shd.mesh is not None:
             p_sh = tree_shardings_shaped(self.model.shd, self.model.param_logical(),
                                          params)
@@ -183,11 +199,27 @@ class Trainer:
                 "straggler_events": len(self.straggler.events)}
 
     # ------------------------------------------------------------ checkpoint
+    def _zero_specs(self) -> Optional[Dict[str, str]]:
+        """Per-leaf shard-spec metadata for the ZeRO carrier-sharded m/v (the
+        checkpoint refuses a sharded<->replicated cross-restore on them)."""
+        if self._dp_step is None or not getattr(self._dp_step, "zero", False):
+            return None
+        spec = self._dp_step.opt_shard_spec
+        return {"opt/m": spec, "opt/v": spec}
+
     def save(self, step: int, params, opt_state):
         self.ckpt.save(step, {"params": params, "opt": opt_state},
-                       extra={"step": step}, blocking=not self.cfg.ckpt_async)
+                       extra={"step": step}, specs=self._zero_specs(),
+                       blocking=not self.cfg.ckpt_async)
 
     def restore(self, step: Optional[int] = None):
+        specs = self._zero_specs()
+        if specs is not None:
+            abs_p = self.model.abstract_params()
+            like = {"params": abs_p,
+                    "opt": self._dp_step.abstract_opt_state(abs_p)}
+            state, extra = self.ckpt.restore(like, step=step, specs=specs)
+            return state["params"], state["opt"], int(extra["step"])
         like = {"params": self.model.abstract_params(),
                 "opt": adamw.abstract_opt_state(self.model.abstract_params())}
         shardings = None

@@ -340,3 +340,193 @@ print("ALL_OK")
 @pytest.mark.slow
 def test_int8_compression_wire_bytes():
     assert "ALL_OK" in run_devices(INT8_WIRE, 4, timeout=560)
+
+
+# ------------------------------------------------------- ZeRO pipeline math
+def test_zero_stage_times_and_pipeline_time():
+    """Three-phase stage arithmetic: the chunked pipeline hides the shorter
+    stages behind the longest, an int8 AG leg strictly shrinks the AG stage,
+    and the degenerate 1-chunk time is the plain stage sum."""
+    p = ov.PipelineParams(n_ici=8, alpha_ici=2e-6, bw_ici=100e9,
+                          alpha_dcn=1e-5, bw_dcn=25e9)
+    nbytes = 64 << 20
+    t_rs, t_inter, t_ag = p.zero_stage_times(nbytes)
+    assert t_rs > 0 and t_inter > 0 and t_ag > 0
+    assert t_rs == pytest.approx(t_ag)  # fp32 both legs, same alpha-beta
+    assert ov.zero_pipeline_time(nbytes, 1, p) == \
+        pytest.approx(t_rs + t_inter + t_ag)
+    # pipelining: n_chunks stages of 1/n the bytes, bottleneck-paced
+    t1 = ov.zero_pipeline_time(nbytes, 1, p)
+    t4 = ov.zero_pipeline_time(nbytes, 4, p)
+    assert t4 < t1
+    # int8 AG multipliers shrink only the AG-side terms
+    t_rs8, t_inter8, t_ag8 = p.zero_stage_times(nbytes, ag_intra=0.25,
+                                                ag_inter=0.25)
+    assert t_rs8 == pytest.approx(t_rs)
+    assert t_ag8 < t_ag and t_inter8 < t_inter
+
+
+def test_exposed_comm_time_zero_schedule():
+    """`schedule="zero"` pricing: reported on the estimate, cheaper than the
+    fp32 allreduce path on the flat tier (half the legs move compressed
+    bytes), int8 AG strictly cheaper than fp32 AG, and unknown schedules are
+    rejected."""
+    from repro.core.topology import make_tpu_pod
+
+    plan = CommPlan.from_topology(make_tpu_pod())
+    sizes = synthetic_grad_sizes(64 << 20)
+    ar = exposed_comm_time(0.01, plan, sizes, n_endpoints=8)
+    z = exposed_comm_time(0.01, plan, sizes, n_endpoints=8, schedule="zero")
+    z8 = exposed_comm_time(0.01, plan, sizes, n_endpoints=8, schedule="zero",
+                           wire={"intra": "int8", "inter": "int8"})
+    assert ar.schedule == "allreduce" and z.schedule == "zero"
+    assert z8.total_comm_s < z.total_comm_s
+    # fp32 zero on a flat tier == the allreduce (ring AR *is* RS + AG)
+    assert z.total_comm_s == pytest.approx(ar.total_comm_s)
+    with pytest.raises(ValueError, match="schedule"):
+        exposed_comm_time(0.01, plan, sizes, n_endpoints=8, schedule="ring")
+    # hierarchical: zero pricing uses the three-phase pipeline and the int8
+    # AG leg still pays off
+    hplan = CommPlan.from_topology(make_tpu_multipod())
+    hz = exposed_comm_time(0.01, hplan, sizes, n_endpoints=512,
+                           schedule="zero")
+    hz8 = exposed_comm_time(0.01, hplan, sizes, n_endpoints=512,
+                            schedule="zero",
+                            wire={"intra": "int8", "inter": "int8"})
+    assert hz8.total_comm_s < hz.total_comm_s
+    assert hz.schedule == "zero" and hz.chunks >= 1
+
+
+# ------------------------------------------------------ ZeRO runtime (multi-dev)
+ZERO_STEP = r"""
+import jax, jax.numpy as jnp, numpy as np
+import repro.compat
+from jax.sharding import AxisType, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.core import overlap as ov
+from repro.models import build_model
+from repro.optim import adamw
+from repro.runtime import steps as rsteps
+
+mesh = jax.make_mesh((4,), ("data",), axis_types=(AxisType.Auto,))
+
+# --- two-tier collectives: RS -> AG round trip restores row order ---
+row = jnp.arange(4 * 6, dtype=jnp.float32)
+def rt(x):
+    shard = ov.two_tier_reduce_scatter(x, "data")
+    return ov.two_tier_all_gather(shard, "data")
+back = shard_map(rt, mesh=mesh, in_specs=P(), out_specs=P(),
+                 check_rep=False)(row)
+np.testing.assert_array_equal(np.asarray(back), 4.0 * np.asarray(row))
+print("rt flat ok")
+
+mesh2 = jax.make_mesh((2, 2), ("pod", "data"), axis_types=(AxisType.Auto,)*2)
+row2 = jnp.arange(2 * 2 * 3 * 2, dtype=jnp.float32)  # 2 chunks * 4 dev * 3
+def rt2(x):
+    shard = ov.two_tier_reduce_scatter(x, "data", "pod", n_chunks=2)
+    return ov.two_tier_all_gather(shard, "data", "pod", n_chunks=2)
+back2 = shard_map(rt2, mesh=mesh2, in_specs=P(), out_specs=P(),
+                  check_rep=False)(row2)
+np.testing.assert_array_equal(np.asarray(back2), 4.0 * np.asarray(row2))
+print("rt hier ok")
+
+# --- quantized AG: every device gets identical dequantized values ---
+def qag(x):
+    shard = ov.two_tier_reduce_scatter(x, "data")
+    s = jnp.maximum(jnp.max(jnp.abs(shard)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(shard / s), -127, 127).astype(jnp.int8)
+    full = ov.quantized_all_gather(q, s, "data")
+    return jax.lax.all_gather(full, "data")  # (4, N): one row per device
+rows = shard_map(qag, mesh=mesh, in_specs=P(), out_specs=P(),
+                 check_rep=False)(row)
+for r in range(1, 4):
+    np.testing.assert_array_equal(np.asarray(rows[0]), np.asarray(rows[r]))
+print("qag replicated ok")
+
+# --- real-model three-phase step vs replicated baseline ---
+cfg = get_config("smollm-135m").reduced()
+shape = ShapeConfig("t", 32, 8, "train")
+model = build_model(cfg)
+opt = adamw.OptConfig(peak_lr=1e-3, warmup_steps=1, decay_steps=20)
+params = model.init(jax.random.PRNGKey(0))
+batch = model.make_batch(shape)
+delta = lambda a, b: max(
+    float(jnp.max(jnp.abs(x.astype(jnp.float32) - y.astype(jnp.float32))))
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+base = rsteps.build_explicit_dp_step(model, opt, mesh, "data")
+bp, bo, bm, _ = base(params, adamw.init_opt_state(params), batch,
+                     base.init_error_state(params))
+
+bb = 1 << 20
+z = rsteps.build_explicit_dp_step(model, opt, mesh, "data", zero=True,
+                                  overlap=True, bucket_bytes=bb)
+zo = z.init_opt_state(params)
+zp, zo2, zm, ze = z(params, zo, batch, z.init_error_state(params))
+d = delta(bp, zp)
+print("zero fp32 vs baseline:", d)
+assert d < 1e-5, d
+# satellite: psum-combined global norm tracks the replicated one
+assert abs(float(bm["grad_norm"]) - float(zm["grad_norm"])) \
+    <= 1e-5 * float(bm["grad_norm"])
+
+# optimizer memory: m/v live carrier-sharded -> per-device bytes = full / 4
+m = zo2["m"]
+assert m.sharding.spec == P(None, "data"), m.sharding.spec
+assert m.addressable_shards[0].data.nbytes * 4 == m.nbytes
+print("opt state sharded ok:", m.shape, m.addressable_shards[0].data.shape)
+
+# --- int8 AG leg: close to baseline, params replicated bit-identically ---
+z8 = rsteps.build_explicit_dp_step(model, opt, mesh, "data", zero=True,
+                                   overlap=True, bucket_bytes=bb,
+                                   compress_bits=8)
+zp8, _, _, _ = z8(params, z8.init_opt_state(params), batch,
+                  z8.init_error_state(params))
+d8 = delta(bp, zp8)
+print("zero int8 vs baseline:", d8)
+assert d8 < 5e-2, d8
+for leaf in jax.tree.leaves(zp8):
+    shards = leaf.addressable_shards
+    for s in shards[1:]:
+        np.testing.assert_array_equal(
+            np.asarray(shards[0].data, np.float32),
+            np.asarray(s.data, np.float32))
+print("int8 params replicated ok")
+
+# --- microbatched + hierarchical variants track the baseline ---
+base_mb = rsteps.build_explicit_dp_step(model, opt, mesh, "data",
+                                        overlap=True, bucket_bytes=bb,
+                                        microbatches=2)
+bmp, _, _, _ = base_mb(params, adamw.init_opt_state(params), batch,
+                       base_mb.init_error_state(params))
+zm2 = rsteps.build_explicit_dp_step(model, opt, mesh, "data", zero=True,
+                                    overlap=True, bucket_bytes=bb,
+                                    microbatches=2)
+mp, _, _, _ = zm2(params, zm2.init_opt_state(params), batch,
+                  zm2.init_error_state(params))
+assert delta(bmp, mp) < 1e-5  # same microbatch accumulation, RS+AG vs AR
+
+zh = rsteps.build_explicit_dp_step(model, opt, mesh2, "data", dcn_axis="pod",
+                                   zero=True, overlap=True, bucket_bytes=bb,
+                                   chunks=3)
+hp, ho, hm, _ = zh(params, zh.init_opt_state(params), batch,
+                   zh.init_error_state(params))
+dh = delta(bp, hp)
+print("zero hier chunked vs baseline:", dh)
+assert dh < 1e-5, dh
+assert ho["m"].sharding.spec == P(None, ("data", "pod")), ho["m"].sharding.spec
+assert ho["m"].addressable_shards[0].data.nbytes * 4 == ho["m"].nbytes
+
+# second step exercises carried sharded m/v
+bp2, bo2, bm2, _ = base(bp, bo, batch, base.init_error_state(params))
+zp2, _, zm2_, _ = z(zp, zo2, batch, ze)
+assert delta(bp2, zp2) < 1e-5
+print("ALL_OK")
+"""
+
+
+@pytest.mark.slow
+def test_zero_step_multidevice_parity():
+    assert "ALL_OK" in run_devices(ZERO_STEP, 4, timeout=560)
