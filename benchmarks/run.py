@@ -525,6 +525,148 @@ def bench_zero():
     return rows
 
 
+def bench_moe():
+    """StepProgram MoE section: planned alltoall step comm per system from 8
+    to 4096 endpoints (the program pricer walking `moe_step_program()`), a
+    live small-mesh expert-parallel step vs the dense explicit-DP baseline,
+    and the program-vs-schedule pricing parity assert.  Writes BENCH_7.json
+    at the repo root so the perf trajectory accumulates across PRs."""
+    import json
+    from pathlib import Path
+
+    import numpy as np
+    import jax
+    import repro.compat  # noqa: F401
+    from repro.core import program as prg
+    from repro.core import scenarios as sc
+    from repro.core.commplan import CommPlan
+    from repro.core.costmodel import exposed_comm_time, make_comm_model
+    from repro.core.scenarios import synthetic_grad_sizes
+    from repro.core.topology import make_tpu_pod
+    from .common import emit
+
+    rows = []
+    bench = {"pr": 7, "section": "moe"}
+
+    # ---- one IR, two consumers: program pricing must equal the schedule
+    # string it replaced (the refactor's no-regression contract)
+    plan = CommPlan.from_topology(make_tpu_pod())
+    sizes = synthetic_grad_sizes(64 << 20)
+    for schedule, program in (("allreduce", prg.train_step_program()),
+                              ("zero", prg.train_step_program(zero=True))):
+        a = exposed_comm_time(0.01, plan, sizes, n_endpoints=8,
+                              schedule=schedule)
+        b = exposed_comm_time(0.01, plan, sizes, n_endpoints=8,
+                              program=program)
+        assert a == b, (schedule, a, b)
+    rows.append({"name": "moe/program_pricer_parity", "us_per_call": 0.0,
+                 "derived": "program== schedule for allreduce+zero"})
+
+    # ---- planned MoE alltoall across the paper systems, 8 -> 4096 endpoints
+    bench["sweep"] = {}
+    for system in sc.PAPER_SYSTEMS:
+        pts = sc.sweep_moe_alltoall(system, model=make_comm_model(system))
+        shapes = sc.check_moe_shapes(system)
+        assert all(shapes.values()), (system, shapes)
+        bench["sweep"][system] = [
+            {"n": p.n_endpoints, "algo": p.algo, "tier": p.tier,
+             "step_comm_s": p.step_comm_s,
+             "goodput_bytes_s": p.goodput_bytes_s} for p in pts]
+        last = pts[-1]
+        rows.append({"name": f"moe/planned_step/{system}_4096",
+                     "us_per_call": last.step_comm_s * 1e6,
+                     "derived": f"algo={last.algo} tier={last.tier}"})
+        group, replicas = sc.moe_expert_placement(
+            sc.make_paper_systems()[system], 4096)
+        bench["sweep"][system + "_placement"] = {"ep_group": group,
+                                                 "n_replicas": replicas}
+
+    # ---- live small-mesh MoE step vs the dense explicit-DP baseline
+    if jax.device_count() >= 2:
+        from jax.sharding import AxisType
+        from repro.configs import get_config
+        from repro.configs.base import ShapeConfig
+        from repro.core.autotune import CollectivePolicy
+        from repro.models import build_model
+        from repro.optim import adamw
+        from repro.runtime import moe_step as ms
+        from repro.runtime import steps as rsteps
+
+        n = jax.device_count()
+        opt = adamw.OptConfig()
+        step_times = {}
+
+        cfg = get_config("deepseek-moe-16b").reduced()
+        # EP axis must divide the expert count (E=4 reduced): on wider hosts
+        # the MoE mesh uses the first E devices; the dense baseline uses all
+        n_ep = min(n, cfg.n_experts)
+        mesh_ep = jax.make_mesh((n_ep,), ("data",),
+                                axis_types=(AxisType.Auto,),
+                                devices=jax.devices()[:n_ep])
+        policy = CollectivePolicy.from_model()
+        pl = policy._as_plan()
+        pl.reset_stats()
+        step = rsteps.build_program_step(cfg, opt, mesh_ep,
+                                         prg.moe_step_program(),
+                                         policy=policy)
+        params = ms.moe_ep_params(cfg, jax.random.PRNGKey(0))
+        batch = ms.moe_ep_batch(cfg, jax.random.PRNGKey(1), 2 * n_ep, 32)
+        ostate = adamw.init_opt_state(params)
+        err = step.init_error_state(params)
+        out = step(params, ostate, batch, err)
+        jax.block_until_ready(out[2]["loss"])
+        assert pl.stats.get("all_to_all_calls") == 2, pl.stats
+        ts = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            out = step(params, ostate, batch, out[3])
+            jax.block_until_ready(out[2]["loss"])
+            ts.append(time.perf_counter() - t0)
+        step_times["moe_alltoall"] = float(np.median(ts))
+        rows.append({"name": f"moe/live_step/moe_alltoall_{n_ep}dev",
+                     "us_per_call": step_times["moe_alltoall"] * 1e6,
+                     "derived": f"loss={float(out[2]['loss']):.3f} "
+                                f"stats={pl.stats.get('all_to_all_algo/xla', 0)}x-xla"})
+
+        dense_cfg = get_config("smollm-135m").reduced()
+        model = build_model(dense_cfg)
+        dparams = model.init(jax.random.PRNGKey(0))
+        dbatch = model.make_batch(ShapeConfig("b", 32, 2 * n, "train"))
+        mesh = jax.make_mesh((n,), ("data",), axis_types=(AxisType.Auto,))
+        dstep = rsteps.build_program_step(model, opt, mesh,
+                                          prg.named_program("allreduce"))
+        dout = dstep(dparams, adamw.init_opt_state(dparams), dbatch,
+                     dstep.init_error_state(dparams))
+        jax.block_until_ready(dout[2]["loss"])
+        ts = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            dout = dstep(dparams, adamw.init_opt_state(dparams), dbatch,
+                         dout[3])
+            jax.block_until_ready(dout[2]["loss"])
+            ts.append(time.perf_counter() - t0)
+        step_times["dense_allreduce"] = float(np.median(ts))
+        rows.append({"name": f"moe/live_step/dense_allreduce_{n}dev",
+                     "us_per_call": step_times["dense_allreduce"] * 1e6,
+                     "derived": f"loss={float(dout[2]['loss']):.3f}"})
+        bench["live_step"] = {f"{k}_us": v * 1e6 for k, v in step_times.items()}
+        bench["live_step"]["devices"] = n
+
+        oracle = sc.moe_executed_path_oracle(cfg, mesh_ep)
+        assert oracle["match"], oracle
+        bench["executed_path"] = oracle
+        rows.append({"name": "moe/executed_path_oracle", "us_per_call": 0.0,
+                     "derived": f"modeled={oracle['modeled']} "
+                                f"executed={oracle['executed']}"})
+
+    path = Path(__file__).resolve().parent.parent / "BENCH_7.json"
+    path.write_text(json.dumps(bench, indent=2))
+    rows.append({"name": "moe/bench_artifact", "us_per_call": 0.0,
+                 "derived": str(path)})
+    emit("moe", rows, ["name", "us_per_call", "derived"])
+    return rows
+
+
 def main() -> None:
     from .figures import ALL_FIGURES
 
@@ -539,6 +681,7 @@ def main() -> None:
     sections["overlap"] = bench_overlap
     sections["wire"] = bench_wire
     sections["zero"] = bench_zero
+    sections["moe"] = bench_moe
     failures = []
     for name, fn in sections.items():
         if filters and not any(f in name for f in filters):

@@ -81,6 +81,16 @@ class CollectivePolicy:
         alpha-beta fits — fp32 everywhere for legacy table-only policies."""
         return self._as_plan().wire_spec()
 
+    @property
+    def program(self):
+        """The plan's persisted StepProgram (`core.program`), or None for
+        legacy table-only policies.  Round-trips through save/load with the
+        rest of the plan blob."""
+        return self._as_plan().step_program()
+
+    def set_program(self, program) -> None:
+        self._as_plan().set_program(program)
+
     def all_reduce(self, x: jnp.ndarray, axis: str, axis_size: int,
                    dcn_axis: Optional[str] = None) -> jnp.ndarray:
         """Trace-time dispatch (sizes are static under jit)."""

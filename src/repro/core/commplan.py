@@ -215,6 +215,11 @@ class CommPlan:
     # where bandwidth-bound, fp32 where alpha-bound.  Empty = fp32 everywhere
     # (legacy plans).
     wire: Dict[str, str] = dataclasses.field(default_factory=dict)
+    # the chosen StepProgram (core.program) as its JSON dict: the plan's
+    # recommended schedule for a training step on this topology.  One
+    # artifact feeds the runtime compiler, the program pricer, dryrun,
+    # scenarios, and hillclimb; empty for legacy plans.
+    program: Dict = dataclasses.field(default_factory=dict)
     stats: Dict[str, int] = dataclasses.field(default_factory=dict, compare=False)
 
     # ------------------------------------------------------------- builders
@@ -324,8 +329,16 @@ class CommPlan:
             meta["calibration"] = (f"v{getattr(calibration, 'version', '?')}/"
                                    f"{getattr(calibration, 'system', '?')}/"
                                    f"n{getattr(calibration, 'n_endpoints', '?')}")
+        # the plan's recommended training program, derived from its own
+        # decisions: overlap is strictly better than the post-hoc blob, and a
+        # lossy intra wire decision rides the int8 error-feedback codec
+        from . import program as prg
+        compress = 8 if wire_fmt.get("intra", "fp32") != "fp32" else 0
+        program = prg.train_step_program(overlap=True,
+                                         compress_bits=compress).to_dict()
         return cls(ar, a2a, rs, ag, bucket_bytes=bucket, hierarchical=two_level,
-                   meta=meta, tiers=tiers, pipeline=pipeline, wire=wire_fmt)
+                   meta=meta, tiers=tiers, pipeline=pipeline, wire=wire_fmt,
+                   program=program)
 
     # -------------------------------------------------------------- lookups
     @staticmethod
@@ -374,6 +387,17 @@ class CommPlan:
         everywhere for legacy plans with no persisted decision)."""
         from .wire import WireSpec
         return WireSpec.from_dict(self.wire)
+
+    def step_program(self):
+        """The persisted StepProgram, or None for legacy plans."""
+        if not self.program:
+            return None
+        from . import program as prg
+        return prg.StepProgram.from_dict(self.program)
+
+    def set_program(self, program) -> None:
+        """Persist a chosen StepProgram (stored as its JSON dict)."""
+        self.program = program.to_dict()
 
     def pipeline_chunks(self, nbytes: int) -> int:
         """Chunk count for the double-buffered hierarchical pipeline on an
@@ -427,6 +451,10 @@ class CommPlan:
     def all_to_all(self, x, axis: str, axis_size: int):
         self._count("all_to_all_calls")
         algo = self.all_to_all_algo(x.size * x.dtype.itemsize, axis_size)
+        # per-algorithm counter: lets the executed path assert *which*
+        # schedule the per-tier table dispatched (e.g. pairwise forced at a
+        # group boundary), not just that an alltoall happened
+        self._count(f"all_to_all_algo/{algo}")
         return coll.get_collective("all_to_all", algo).fn(x, axis)
 
     def reduce_scatter(self, x, axis: str, axis_size: int):
@@ -458,6 +486,7 @@ class CommPlan:
             "tiers": {str(n): t for n, t in self.tiers.items()},
             "pipeline": dict(self.pipeline),
             "wire": dict(self.wire),
+            "program": dict(self.program),
         }
 
     @classmethod
@@ -476,6 +505,7 @@ class CommPlan:
             tiers={int(n): str(t) for n, t in blob.get("tiers", {}).items()},
             pipeline={k: float(v) for k, v in blob.get("pipeline", {}).items()},
             wire={k: str(v) for k, v in blob.get("wire", {}).items()},
+            program=dict(blob.get("program", {})),
         )
 
     def save(self, path: str) -> None:

@@ -342,7 +342,8 @@ def exposed_comm_time(compute_time: float, plan, sizes,
                       chunks: Optional[int] = None,
                       mechanism: str = "ccl",
                       wire=None,
-                      schedule: str = "allreduce") -> OverlapEstimate:
+                      schedule: str = "allreduce",
+                      program=None) -> OverlapEstimate:
     """Overlap-aware step-time predictor for the explicit-DP gradient path.
 
     `sizes` are the per-tensor gradient byte counts in forward layer order;
@@ -374,11 +375,44 @@ def exposed_comm_time(compute_time: float, plan, sizes,
     carrying one RS and one AG share); flat plans as half an fp32 allreduce
     plus half an allreduce at the AG wire — a ring allreduce *is* RS + AG, so
     each leg costs half of it at its own format.
+
+    `program=` prices a `core.program.StepProgram` node-by-node — the *same
+    object* `runtime.steps.build_program_step` compiles, so the runtime and
+    the roofline can no longer drift.  The legacy `schedule=` strings are a
+    shim: internally they build the equivalent program.  A program's
+    `QuantizeWire` node implies the runtime's realizable wire (intra int8,
+    inter fp32 — except the ZeRO AG leg, which carries int8 on both tiers),
+    its `ChunkedPipeline` node the pipeline depth, and an explicit
+    `Bucketize.bucket_bytes` overrides the plan's crossover; an explicit
+    `wire=` / `chunks=` argument still wins.  An `AllToAll`-bearing program
+    (the expert-parallel MoE step) switches to the alltoall pricer: each
+    AllToAll node pays one forward and one backward exchange at the algorithm
+    the plan's per-tier table dispatches for that payload ("xla" -> the *CCL
+    asymptotic model, "pairwise" -> the bounded-state MPI-style model — which
+    is how Obs. 7's >4096-endpoint *CCL blow-up is avoided at scale), all of
+    it exposed (token exchanges sit on the critical path); remaining `sizes`
+    entries beyond the first two are dense (router) gradient bytes priced on
+    the allreduce model.
     """
     import dataclasses as _dc
 
     from . import overlap as ov
+    from . import program as prg
     from .wire import WireSpec, realized_multiplier
+
+    if program is not None:
+        program.validate()
+        schedule = program.schedule
+        cp = program.node("chunked_pipeline")
+        if chunks is None and cp is not None:
+            chunks = cp.chunks
+        qw = program.node("quantize_wire")
+        if wire is None and qw is not None:
+            wire = WireSpec(intra="int8",
+                            inter="int8" if program.has("sharded_optim_update")
+                            else "fp32")
+    elif schedule in ("allreduce", "zero"):
+        program = prg.train_step_program(zero=(schedule == "zero"))
 
     if wire == "plan":
         wire = plan.wire_spec() if hasattr(plan, "wire_spec") else None
@@ -391,15 +425,21 @@ def exposed_comm_time(compute_time: float, plan, sizes,
         in hw.SYSTEMS else "tpu_v5e")
     if n_endpoints is None:
         n_endpoints = int(plan.meta.get("n_endpoints", 0) or 0) or model.graph.n
-    if schedule not in ("allreduce", "zero"):
+    if schedule not in ("allreduce", "zero", "moe_alltoall"):
         raise ValueError(f"unknown schedule {schedule!r}; "
-                         f"one of ('allreduce', 'zero')")
+                         f"one of ('allreduce', 'zero', 'moe_alltoall')")
     sizes = [int(s) for s in sizes if int(s) > 0]
     wire_str = f"{wire.intra}/{wire.inter}"
     if not sizes:
         return OverlapEstimate(compute_time, 0.0, 0.0, compute_time, 1.0, 0, 1,
                                wire_str, schedule)
-    bucket_cap = max(int(plan.bucket_bytes), 1)
+    if schedule == "moe_alltoall":
+        return _price_moe_program(compute_time, plan, sizes, n_endpoints,
+                                  model, mechanism, wire_str)
+    bz = program.node("bucketize") if program is not None else None
+    bucket_cap = max(int(bz.bucket_bytes if (bz is not None and
+                                             bz.bucket_bytes)
+                         else plan.bucket_bytes), 1)
     buckets = ov.make_buckets(sizes, bucket_cap)  # byte-granular, reverse order
     b_bytes = [float(b.n_elems) for b in buckets]
     nn = model.profile.endpoints_per_node
@@ -463,6 +503,36 @@ def exposed_comm_time(compute_time: float, plan, sizes,
     return OverlapEstimate(compute_time, total_comm, exposed, step,
                            min(max(hidden, 0.0), 1.0), len(buckets), c,
                            wire_str, schedule)
+
+
+def _price_moe_program(compute_time: float, plan, sizes, n_endpoints: int,
+                       model: CommModel, mechanism: str,
+                       wire_str: str) -> OverlapEstimate:
+    """Price an AllToAll-bearing (expert-parallel MoE) program.
+
+    ``sizes[:2]`` are the dispatch/combine per-endpoint buffer bytes (see
+    ``runtime.moe_step.dispatch_bytes``); anything after is dense (router)
+    gradient bytes on the allreduce model.  Each exchange runs at whatever
+    algorithm the plan's per-tier table ranks first for that (payload,
+    endpoint count) — the executed-path oracle in ``core.scenarios`` asserts
+    the live step dispatches the same one — and is charged twice (the
+    backward of an alltoall is its transpose).  Token exchanges gate the
+    forward, so nothing here hides behind compute: exposed == total.
+    """
+    a2a_sizes, dense = sizes[:2], sizes[2:]
+    t_a2a = 0.0
+    for s in a2a_sizes:
+        algo = plan.all_to_all_algo(int(s), n_endpoints) \
+            if hasattr(plan, "all_to_all_algo") else "pairwise"
+        mech = mechanism if algo == "xla" else "mpi"
+        t_a2a += 2.0 * model.alltoall_at_scale(float(s), n_endpoints,
+                                               mechanism=mech).seconds
+    t_dense = sum(model.allreduce_at_scale(float(s), n_endpoints,
+                                           mechanism=mechanism).seconds
+                  for s in dense)
+    total = t_a2a + t_dense
+    return OverlapEstimate(compute_time, total, total, compute_time + total,
+                           0.0, len(sizes), 1, wire_str, "moe_alltoall")
 
 
 # Memoized system models: the scenario sweeps (`at_scale_suite`,

@@ -1,0 +1,285 @@
+"""StepProgram IR: one declarative description of a training step.
+
+A StepProgram is a small typed sequence of schedule nodes that three layers
+consume from the *same object*:
+
+  * ``runtime.steps.build_program_step``     compiles it to the shard_map step
+    (the legacy ``overlap=/zero=/compress_bits=/chunks=/microbatches=`` flag
+    jungle is now a shim that normalizes through this IR);
+  * ``core.costmodel.exposed_comm_time(program=...)``  prices it node-by-node
+    (the stringly-typed ``schedule=`` branches are shimmed onto programs);
+  * ``core.commplan.CommPlan.program``       persists it in plan JSON so
+    dryrun, scenarios, and hillclimb all consume one artifact.
+
+Node vocabulary (execution order within a program):
+
+  MicrobatchLoop(n)        scan-carried gradient accumulation (needs overlap)
+  Bucketize(bucket_bytes)  pack leaves into wire buckets; ``reverse=True`` is
+                           the overlap engine's reverse-layer-order issue
+                           schedule (bucket i reduces while bucket i+1's
+                           backward still runs).  ``bucket_bytes=None`` means
+                           the plan's latency/bandwidth crossover; a program
+                           with no Bucketize node is the per-tensor wire.
+  QuantizeWire(bits)       int8 error-feedback codec on the wire payload
+  ChunkedPipeline(chunks)  double-buffered hierarchical pipeline depth
+                           (``None`` = the plan's per-tier alpha-beta fit)
+  AllReduce()              dense-gradient reduction (flat or hierarchical)
+  ReduceScatter()          \
+  ShardedOptimUpdate()      } the ZeRO three-phase schedule
+  AllGather()              /
+  AllToAll(role)           planned token dispatch/combine (expert parallelism)
+
+Programs are plain frozen dataclasses with a JSON round-trip; no jax imports
+here so commplan/costmodel can depend on this module freely.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+# --------------------------------------------------------------------- nodes
+
+
+@dataclasses.dataclass(frozen=True)
+class MicrobatchLoop:
+    kind = "microbatch_loop"
+    n: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucketize:
+    kind = "bucketize"
+    bucket_bytes: Optional[int] = None   # None = plan crossover
+    reverse: bool = False                # True = overlap issue schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizeWire:
+    kind = "quantize_wire"
+    bits: int = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkedPipeline:
+    kind = "chunked_pipeline"
+    chunks: Optional[int] = None         # None = plan's per-tier fit
+
+
+@dataclasses.dataclass(frozen=True)
+class AllReduce:
+    kind = "all_reduce"
+
+
+@dataclasses.dataclass(frozen=True)
+class ReduceScatter:
+    kind = "reduce_scatter"
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedOptimUpdate:
+    kind = "sharded_optim_update"
+
+
+@dataclasses.dataclass(frozen=True)
+class AllGather:
+    kind = "all_gather"
+
+
+@dataclasses.dataclass(frozen=True)
+class AllToAll:
+    kind = "all_to_all"
+    role: str = "dispatch"               # "dispatch" | "combine"
+
+
+NODE_TYPES = {
+    cls.kind: cls
+    for cls in (MicrobatchLoop, Bucketize, QuantizeWire, ChunkedPipeline,
+                AllReduce, ReduceScatter, ShardedOptimUpdate, AllGather,
+                AllToAll)
+}
+
+
+# ------------------------------------------------------------------- program
+
+
+@dataclasses.dataclass(frozen=True)
+class StepProgram:
+    name: str
+    nodes: Tuple[Any, ...] = ()
+
+    # ------------------------------------------------------------- structure
+    def node(self, kind: str):
+        for nd in self.nodes:
+            if nd.kind == kind:
+                return nd
+        return None
+
+    def has(self, kind: str) -> bool:
+        return self.node(kind) is not None
+
+    @property
+    def schedule(self) -> str:
+        """Legacy schedule string this program corresponds to."""
+        if self.has("all_to_all"):
+            return "moe_alltoall"
+        if self.has("sharded_optim_update"):
+            return "zero"
+        return "allreduce"
+
+    def validate(self) -> "StepProgram":
+        kinds = [nd.kind for nd in self.nodes]
+        for k in kinds:
+            if k not in NODE_TYPES:
+                raise ValueError(f"unknown StepProgram node kind {k!r}")
+        bz, qw = self.node("bucketize"), self.node("quantize_wire")
+        mb = self.node("microbatch_loop")
+        zero = self.has("sharded_optim_update")
+        a2a = [nd for nd in self.nodes if nd.kind == "all_to_all"]
+        if qw is not None and qw.bits != 8:
+            raise ValueError(f"QuantizeWire.bits must be 8; got {qw.bits}")
+        if mb is not None and mb.n > 1 and not (bz is not None and bz.reverse):
+            raise ValueError(
+                "MicrobatchLoop needs the overlap issue schedule "
+                "(Bucketize(reverse=True)): explicit-DP microbatching is "
+                "implemented by the overlap schedule")
+        if (zero or (bz is not None and bz.reverse)) and \
+                (bz is None or bz.bucket_bytes == 0):
+            raise ValueError(
+                "overlap/zero schedules need a bucketed carrier, not "
+                "per-tensor wire (Bucketize with bucket_bytes != 0)")
+        if zero:
+            if not (self.has("reduce_scatter") and self.has("all_gather")):
+                raise ValueError("ShardedOptimUpdate needs the full ZeRO "
+                                 "phase sequence ReduceScatter -> "
+                                 "ShardedOptimUpdate -> AllGather")
+            if a2a:
+                raise ValueError("AllToAll does not compose with the ZeRO "
+                                 "schedule yet")
+        elif self.has("reduce_scatter") or self.has("all_gather"):
+            raise ValueError("ReduceScatter/AllGather outside the ZeRO "
+                             "sequence (missing ShardedOptimUpdate)")
+        if a2a:
+            roles = sorted(nd.role for nd in a2a)
+            if roles != ["combine", "dispatch"]:
+                raise ValueError("an AllToAll program needs exactly one "
+                                 f"dispatch and one combine node; got {roles}")
+            if not self.has("all_reduce"):
+                raise ValueError("an AllToAll program still needs an "
+                                 "AllReduce node for the dense "
+                                 "(router) gradients")
+            if mb is not None and mb.n > 1:
+                raise ValueError("MicrobatchLoop is not supported on the "
+                                 "AllToAll (expert-parallel) path yet")
+        elif not zero and not self.has("all_reduce"):
+            raise ValueError("a training StepProgram needs a reduction: "
+                             "AllReduce, the ZeRO sequence, or AllToAll")
+        return self
+
+    # ----------------------------------------------------------------- JSON
+    def to_dict(self) -> Dict[str, Any]:
+        return {"name": self.name,
+                "nodes": [{"kind": nd.kind, **dataclasses.asdict(nd)}
+                          for nd in self.nodes]}
+
+    @classmethod
+    def from_dict(cls, blob: Dict[str, Any]) -> "StepProgram":
+        nodes = []
+        for nd in blob.get("nodes", ()):
+            nd = dict(nd)
+            kind = nd.pop("kind")
+            if kind not in NODE_TYPES:
+                raise ValueError(f"unknown StepProgram node kind {kind!r}")
+            nodes.append(NODE_TYPES[kind](**nd))
+        return cls(name=blob.get("name", "program"), nodes=tuple(nodes))
+
+    # ------------------------------------------------------------- lowering
+    def step_kwargs(self) -> Dict[str, Any]:
+        """Lower to the explicit-DP engine's knobs.
+
+        ``train_step_program(**program.step_kwargs())`` rebuilds an equivalent
+        program — the round-trip the parity tests pin down.
+        """
+        mb, bz = self.node("microbatch_loop"), self.node("bucketize")
+        qw, cp = self.node("quantize_wire"), self.node("chunked_pipeline")
+        return dict(
+            overlap=bool(bz is not None and bz.reverse),
+            zero=self.has("sharded_optim_update"),
+            compress_bits=qw.bits if qw is not None else 0,
+            chunks=cp.chunks if cp is not None else None,
+            microbatches=mb.n if mb is not None else 1,
+            bucket_bytes=bz.bucket_bytes if bz is not None else 0,
+        )
+
+
+# ------------------------------------------------------------------ builders
+
+
+def train_step_program(overlap: bool = False, zero: bool = False,
+                       compress_bits: int = 0, chunks: Optional[int] = None,
+                       microbatches: int = 1,
+                       bucket_bytes: Optional[int] = None) -> StepProgram:
+    """The dense-gradient training program for a legacy flag combination.
+
+    Mirrors ``build_explicit_dp_step``'s defaulting exactly: with
+    ``bucket_bytes=None`` the compress-only path stays per-tensor (legacy
+    exact-tail wire) while every other mode buckets at the plan's crossover.
+    """
+    if compress_bits not in (0, 8):
+        raise ValueError(f"compress_bits must be 0 or 8; got {compress_bits}")
+    if bucket_bytes == 0:
+        bucketed = False
+    elif bucket_bytes is None:
+        bucketed = not (compress_bits and not overlap and not zero)
+    else:
+        bucketed = True
+    nodes = []
+    if microbatches > 1:
+        nodes.append(MicrobatchLoop(microbatches))
+    if bucketed:
+        nodes.append(Bucketize(bucket_bytes, reverse=bool(overlap)))
+    if compress_bits:
+        nodes.append(QuantizeWire(compress_bits))
+    nodes.append(ChunkedPipeline(chunks))
+    if zero:
+        nodes += [ReduceScatter(), ShardedOptimUpdate(), AllGather()]
+    else:
+        nodes.append(AllReduce())
+    name = "zero" if zero else ("overlap" if overlap else "allreduce")
+    if compress_bits:
+        name += "_int8"
+    if microbatches > 1:
+        name += f"_mb{microbatches}"
+    if chunks is not None and chunks > 1:
+        name += f"_chunked{chunks}"
+    return StepProgram(name, tuple(nodes)).validate()
+
+
+def moe_step_program(compress_bits: int = 0,
+                     bucket_bytes: Optional[int] = None) -> StepProgram:
+    """Expert-parallel MoE step: token dispatch/combine as planned AllToAll
+    nodes, dense (router) gradients on the planned AllReduce."""
+    nodes = [AllToAll("dispatch"), AllToAll("combine")]
+    if bucket_bytes:
+        nodes.append(Bucketize(bucket_bytes))
+    if compress_bits:
+        nodes.append(QuantizeWire(compress_bits))
+    nodes.append(AllReduce())
+    name = "moe_alltoall" + ("_int8" if compress_bits else "")
+    return StepProgram(name, tuple(nodes)).validate()
+
+
+NAMED_PROGRAMS = {
+    "allreduce": lambda: train_step_program(),
+    "overlap": lambda: train_step_program(overlap=True),
+    "overlap_int8": lambda: train_step_program(overlap=True, compress_bits=8),
+    "zero": lambda: train_step_program(zero=True),
+    "zero_int8": lambda: train_step_program(zero=True, compress_bits=8),
+    "moe_alltoall": lambda: moe_step_program(),
+}
+
+
+def named_program(name: str) -> StepProgram:
+    if name not in NAMED_PROGRAMS:
+        raise ValueError(f"unknown program {name!r} "
+                         f"(have {sorted(NAMED_PROGRAMS)})")
+    return NAMED_PROGRAMS[name]()

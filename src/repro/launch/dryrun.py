@@ -165,10 +165,13 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             # ZeRO (RS -> sharded AdamW -> AG) variant: the three-phase
             # schedule priced by the same predictor, plus the memory and
             # wire-byte headlines — fp32 m/v shrink by the DP degree, and
-            # the AG leg's wire format sets the planned DP bytes
+            # the AG leg's wire format sets the planned DP bytes.  Priced
+            # from the StepProgram object (core.program) — the same artifact
+            # the runtime compiles — not the legacy schedule= string.
+            from ..core import program as prg
             est_z = exposed_comm_time(t_comp, plan, grad_sizes,
                                       n_endpoints=n_dev, wire="plan",
-                                      schedule="zero")
+                                      program=prg.train_step_program(zero=True))
             ag_fmt = wspec.inter if multi_pod else wspec.intra
             zwb = zero_wire_bytes(grad_bytes, n_dev, ag_fmt=ag_fmt,
                                   n_buckets=n_buckets)
@@ -180,10 +183,12 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                 dp_wire_bytes_planned_zero=zwb["total"],
                 dp_wire_ratio_zero=zwb["ratio"],
             )
+            plan_prog = plan.step_program()
             overlap_terms = dict(
                 exposed_comm_s=est.exposed_s,
                 hidden_comm_fraction=est.hidden_fraction,
                 overlap_chunks=est.chunks,
+                plan_program=plan_prog.name if plan_prog else None,
                 step_time_overlap_s=t_comp + est.exposed_s,
                 wire=wspec.to_dict(),
                 exposed_comm_wire_s=est_w.exposed_s,

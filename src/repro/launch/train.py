@@ -18,6 +18,7 @@ import dataclasses
 import sys
 
 from ..configs.base import SHAPES, get_config, list_configs, shape_applicable
+from ..core import program as prg
 from ..core.autotune import CollectivePolicy
 from ..optim import OptConfig
 from ..runtime.train import Trainer, TrainConfig
@@ -31,6 +32,72 @@ def parse_mesh(spec: str):
     if len(dims) == 3:
         return make_mesh(tuple(dims), ("pod", "data", "model"))
     raise SystemExit(f"bad --mesh {spec!r} (want DxM or PxDxM)")
+
+
+def resolve_step_program(args, mesh, plan):
+    """One place for the explicit-DP flag implications, mesh validation, and
+    wire resolution.  Returns ``(program, dcn_axis)``: the StepProgram the
+    runtime compiles and the pricer prices, or ``(None, None)`` when the XLA
+    SPMD path runs (it chooses its own collectives — no program to plan).
+    """
+    if args.overlap or args.zero:
+        args.explicit_dp = True  # both are explicit-DP execution modes
+    dcn_axis = None
+    if args.explicit_dp:
+        if mesh is None:
+            raise SystemExit("--explicit-dp needs multiple devices (set "
+                             "XLA_FLAGS=--xla_force_host_platform_device_count=N "
+                             "on a single-device host)")
+        if mesh.shape.get("model", 1) > 1:
+            raise SystemExit("--explicit-dp needs a pure-DP mesh (model dim 1); "
+                             f"got mesh {dict(mesh.shape)}")
+        if mesh.shape.get("pod", 1) > 1:
+            dcn_axis = "pod"  # hierarchical allreduce over DCN when two-level
+    if args.compress_bits == "auto":
+        # the plan's calibrated per-tier wire decision (core.wire), restricted
+        # to what the runtime's wire can realize: int8 rides the gather over
+        # the DP axis, so on a flat mesh that gather spans the whole fabric
+        # (any planned lossy tier pays), while on a two-level mesh the inter
+        # leg stays fp32 and only a lossy *intra* decision is realizable.  A
+        # bf16-planned tier maps to the int8 error-feedback wire (the only
+        # lossy format the trainer implements — strictly fewer bytes, and
+        # error feedback where bf16 would round silently).
+        from ..core.wire import gather_wins
+        wire = (plan or CollectivePolicy.from_model()).wire
+        if args.zero:
+            # the ZeRO all-gather (param return) leg realizes the *idealized*
+            # multiplier at any endpoint count — each device contributes its
+            # 1/n shard exactly once — so there is no gather_wins gate: any
+            # planned lossy tier is worth compressing.
+            realizable = args.explicit_dp and wire.compresses
+        else:
+            realizable = args.explicit_dp and (
+                (wire.intra != "fp32") if dcn_axis is not None
+                else wire.compresses)
+            # the realized int8 gather must also win at the mesh's actual
+            # gather axis size — above 8 endpoints it moves more bytes than
+            # fp32.  Without --explicit-dp there is no wire to compress: auto
+            # resolves to 0 (only a literal 8 hard-errors below).
+            n_gather = mesh.shape.get("data", 1) if mesh is not None else 1
+            realizable = realizable and gather_wins(n_gather)
+        compress_bits = 8 if realizable else 0
+        print(f"wire: {wire.intra}/{wire.inter} -> compress_bits={compress_bits}")
+    else:
+        try:
+            compress_bits = int(args.compress_bits)
+        except ValueError:
+            raise SystemExit(f"--compress-bits {args.compress_bits!r}: "
+                             f"want 0, 8, or auto")
+    if compress_bits and not args.explicit_dp:
+        raise SystemExit("--compress-bits needs --explicit-dp (the XLA SPMD "
+                         "path chooses its own collectives)")
+    if not args.explicit_dp:
+        return None, None
+    program = prg.train_step_program(
+        overlap=args.overlap, zero=args.zero, compress_bits=compress_bits,
+        chunks=args.chunks, microbatches=args.microbatches,
+        bucket_bytes=args.bucket_bytes)
+    return program, dcn_axis
 
 
 def main(argv=None):
@@ -105,11 +172,11 @@ def main(argv=None):
     if shape.kind != "train":
         raise SystemExit(f"--shape {args.shape} is a {shape.kind} shape; use launch.serve")
 
-    if args.overlap or args.zero:
-        args.explicit_dp = True  # both are explicit-DP execution modes
-    # explicit-DP wants a pure-DP default mesh (model dim 1)
+    # explicit-DP wants a pure-DP default mesh (model dim 1); --overlap/--zero
+    # imply explicit-DP (resolve_step_program re-asserts the implication)
+    explicit = args.explicit_dp or args.overlap or args.zero
     mesh = parse_mesh(args.mesh) if args.mesh \
-        else make_host_mesh(model=1 if args.explicit_dp else 0)
+        else make_host_mesh(model=1 if explicit else 0)
     policy = None
     if args.policy and args.calibration:
         raise SystemExit("--policy and --calibration are mutually exclusive "
@@ -140,61 +207,15 @@ def main(argv=None):
         print(f"calibration: {args.calibration} (schema v{profile.version}, "
               f"system={system}, {len(profile.params)} fitted keys) -> "
               f"re-ranked plan, bucket={policy.bucket_bytes} B")
-    dcn_axis = None
-    if args.explicit_dp:
-        if mesh is None:
-            raise SystemExit("--explicit-dp needs multiple devices (set "
-                             "XLA_FLAGS=--xla_force_host_platform_device_count=N "
-                             "on a single-device host)")
-        if mesh.shape.get("model", 1) > 1:
-            raise SystemExit("--explicit-dp needs a pure-DP mesh (model dim 1); "
-                             f"got mesh {dict(mesh.shape)}")
-        if mesh.shape.get("pod", 1) > 1:
-            dcn_axis = "pod"  # hierarchical allreduce over DCN when two-level
     if policy is not None:
         src = policy.meta.get("source", "?")
         print(f"policy: {args.policy or args.calibration} (source={src}, "
               f"bucket={policy.bucket_bytes} B, "
               f"wire={policy.wire.intra}/{policy.wire.inter})")
-    if args.compress_bits == "auto":
-        # the plan's calibrated per-tier wire decision (core.wire), restricted
-        # to what the runtime's wire can realize: int8 rides the gather over
-        # the DP axis, so on a flat mesh that gather spans the whole fabric
-        # (any planned lossy tier pays), while on a two-level mesh the inter
-        # leg stays fp32 and only a lossy *intra* decision is realizable.  A
-        # bf16-planned tier maps to the int8 error-feedback wire (the only
-        # lossy format the trainer implements — strictly fewer bytes, and
-        # error feedback where bf16 would round silently).
-        from ..core.autotune import CollectivePolicy as _CP
-        from ..core.wire import gather_wins
-        wire = (policy or _CP.from_model()).wire
-        if args.zero:
-            # the ZeRO all-gather (param return) leg realizes the *idealized*
-            # multiplier at any endpoint count — each device contributes its
-            # 1/n shard exactly once — so there is no gather_wins gate: any
-            # planned lossy tier is worth compressing.
-            realizable = args.explicit_dp and wire.compresses
-        else:
-            realizable = args.explicit_dp and (
-                (wire.intra != "fp32") if dcn_axis is not None
-                else wire.compresses)
-            # the realized int8 gather must also win at the mesh's actual
-            # gather axis size — above 8 endpoints it moves more bytes than
-            # fp32.  Without --explicit-dp there is no wire to compress: auto
-            # resolves to 0 (only a literal 8 hard-errors below).
-            n_gather = mesh.shape.get("data", 1) if mesh is not None else 1
-            realizable = realizable and gather_wins(n_gather)
-        compress_bits = 8 if realizable else 0
-        print(f"wire: {wire.intra}/{wire.inter} -> compress_bits={compress_bits}")
-    else:
-        try:
-            compress_bits = int(args.compress_bits)
-        except ValueError:
-            raise SystemExit(f"--compress-bits {args.compress_bits!r}: "
-                             f"want 0, 8, or auto")
-    if compress_bits and not args.explicit_dp:
-        raise SystemExit("--compress-bits needs --explicit-dp (the XLA SPMD "
-                         "path chooses its own collectives)")
+    program, dcn_axis = resolve_step_program(args, mesh, policy)
+    if program is not None:
+        print(f"program: {program.name} "
+              f"({' -> '.join(nd.kind for nd in program.nodes)})")
 
     trainer = Trainer(
         cfg, shape,
@@ -203,9 +224,7 @@ def main(argv=None):
                     ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir,
                     log_every=10, straggler_threshold=args.straggler_threshold,
                     explicit_dp=args.explicit_dp, dcn_axis=dcn_axis,
-                    policy=policy, bucket_bytes=args.bucket_bytes,
-                    overlap=args.overlap, chunks=args.chunks,
-                    compress_bits=compress_bits, zero=args.zero),
+                    policy=policy, program=program),
         mesh=mesh,
     )
     result = trainer.run(resume=args.resume)

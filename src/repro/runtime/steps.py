@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig, ShapeConfig
+from ..core import program as prg
 from ..core.autotune import CollectivePolicy
 from ..models.model import Model
 from ..models.sharding import Sharder, tree_shardings, tree_shardings_shaped
@@ -147,7 +148,9 @@ def build_explicit_dp_step(model: Model, opt: adamw.OptConfig, mesh, axis: str =
                            overlap: bool = False,
                            microbatches: int = 1,
                            chunks: Optional[int] = None,
-                           zero: bool = False) -> Callable:
+                           zero: bool = False,
+                           step_program: Optional[prg.StepProgram] = None) \
+        -> Callable:
     """Pure-DP train step under shard_map with explicit gradient collectives.
 
     Params/opt state replicated; batch sharded on `axis` (and `dcn_axis` when
@@ -237,6 +240,20 @@ def build_explicit_dp_step(model: Model, opt: adamw.OptConfig, mesh, axis: str =
         raise ValueError("zero=True shards the packed carrier; per-tensor "
                          "reduction (bucket_bytes=0) is not supported — omit "
                          "bucket_bytes to use the plan's crossover")
+    # normalize through the StepProgram IR: the program (given directly or
+    # built from the legacy flag combination) is the single description of
+    # this step — the knobs below are *lowered* from it, and the same object
+    # is what the cost model prices (exposed_comm_time(program=)) and the
+    # plan persists.  The boolean kwargs are retained as a shim.
+    if step_program is None:
+        step_program = prg.train_step_program(
+            overlap=overlap, zero=zero, compress_bits=compress_bits,
+            chunks=chunks, microbatches=microbatches,
+            bucket_bytes=bucket_bytes)
+    kw = step_program.validate().step_kwargs()
+    overlap, zero = kw["overlap"], kw["zero"]
+    compress_bits, chunks = kw["compress_bits"], kw["chunks"]
+    microbatches, bucket_bytes = kw["microbatches"], kw["bucket_bytes"]
     if bucket_bytes is None:
         # plain compress_bits (no overlap, no explicit bucket size) keeps the
         # legacy per-tensor wire; bucketed compression opts in via
@@ -690,6 +707,7 @@ def build_explicit_dp_step(model: Model, opt: adamw.OptConfig, mesh, axis: str =
                 "step": jax.ShapeDtypeStruct((), jnp.int32)}
 
     step._cache = cache  # introspectable by tests
+    step.program = step_program
     step.init_error_state = make_error_state
     step.init_opt_state = make_opt_state
     step.abstract_opt_state = make_abstract_opt_state
@@ -699,6 +717,30 @@ def build_explicit_dp_step(model: Model, opt: adamw.OptConfig, mesh, axis: str =
     step.opt_shard_spec = "zero-carrier:" + ",".join(shard_axes) if zero \
         else None
     return step
+
+
+def build_program_step(model: Model, opt: adamw.OptConfig, mesh,
+                       program: prg.StepProgram, axis: str = "data",
+                       policy: Optional[CollectivePolicy] = None,
+                       dcn_axis: Optional[str] = None) -> Callable:
+    """Compile a StepProgram to the shard_map step.
+
+    The program-first entry point: dense-gradient programs (AllReduce or the
+    ZeRO sequence) lower onto the explicit-DP engine via
+    ``program.step_kwargs()``; an AllToAll-bearing program compiles to the
+    expert-parallel MoE step (`runtime.moe_step`), whose token
+    dispatch/combine routes through the plan's per-tier alltoall tables.
+    Either way ``step.program`` is the object that built the step — the same
+    one ``exposed_comm_time(program=...)`` prices.
+    """
+    program.validate()
+    if program.has("all_to_all"):
+        from .moe_step import build_moe_ep_step
+        return build_moe_ep_step(model, opt, mesh, axis=axis, policy=policy,
+                                 program=program)
+    return build_explicit_dp_step(model, opt, mesh, axis, policy=policy,
+                                  dcn_axis=dcn_axis, step_program=program,
+                                  **program.step_kwargs())
 
 
 def init_error_state(params):

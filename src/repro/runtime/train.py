@@ -63,6 +63,11 @@ class TrainConfig:
     # optimizer memory drops by the DP degree), all-gather updated params at
     # the wire dtype.  Implies explicit_dp + bucketed carrier.
     zero: bool = False
+    # StepProgram (core.program): the declarative schedule the step compiles
+    # from.  When set it supersedes the boolean knobs above (which become a
+    # legacy shim — launch.train.resolve_step_program builds the program from
+    # the flags); its name is stamped into checkpoint metadata.
+    program: Optional[object] = None
 
 
 class Trainer:
@@ -119,12 +124,17 @@ class Trainer:
                              "(launch.train --overlap) with microbatches "
                              f"({c.microbatches} requested)")
         self.model = build_model(self.model_cfg)
-        dp_step = rsteps.build_explicit_dp_step(
-            self.model, self.opt, mesh, c.dp_axis, policy=c.policy,
-            bucket_bytes=c.bucket_bytes, dcn_axis=c.dcn_axis,
-            overlap=c.overlap, chunks=c.chunks,
-            microbatches=c.microbatches, compress_bits=c.compress_bits,
-            zero=c.zero)
+        if c.program is not None:
+            dp_step = rsteps.build_program_step(
+                self.model, self.opt, mesh, c.program, axis=c.dp_axis,
+                policy=c.policy, dcn_axis=c.dcn_axis)
+        else:
+            dp_step = rsteps.build_explicit_dp_step(
+                self.model, self.opt, mesh, c.dp_axis, policy=c.policy,
+                bucket_bytes=c.bucket_bytes, dcn_axis=c.dcn_axis,
+                overlap=c.overlap, chunks=c.chunks,
+                microbatches=c.microbatches, compress_bits=c.compress_bits,
+                zero=c.zero)
         self._dp_step = dp_step
         self._dp_err = None
 
@@ -208,8 +218,14 @@ class Trainer:
         return {"opt/m": spec, "opt/v": spec}
 
     def save(self, step: int, params, opt_state):
+        extra = {"step": step}
+        program = getattr(self._dp_step, "program", None)
+        if program is not None:
+            # the schedule that produced this state, auditable from the
+            # checkpoint alone (and the ZeRO shard specs below it)
+            extra["program"] = program.to_dict()
         self.ckpt.save(step, {"params": params, "opt": opt_state},
-                       extra={"step": step}, specs=self._zero_specs(),
+                       extra=extra, specs=self._zero_specs(),
                        blocking=not self.cfg.ckpt_async)
 
     def restore(self, step: Optional[int] = None):
