@@ -667,6 +667,61 @@ def bench_moe():
     return rows
 
 
+def bench_lint():
+    """CommLint static-analysis section (PR 8): every named StepProgram is
+    built on the host devices, its jaxpr traced into a CollectiveTrace, and
+    linted against the ExpectedTrace compiled from its IR — all clean, by
+    assert — plus the hierarchical two-tier chunked-int8 path on a pod x data
+    mesh.  Tracing only, no execution; the per-program wall time is the cost
+    of the CI gate itself.  Writes BENCH_8.json at the repo root so the
+    trajectory accumulates across PRs."""
+    import json
+    from pathlib import Path
+
+    import jax
+    import repro.compat  # noqa: F401
+    from repro.core import program as prg
+    from repro.launch.lint import lint_named_programs, lint_program_on_mesh
+    from .common import emit
+
+    rows = []
+    bench = {"pr": 8, "section": "lint", "devices": jax.device_count(),
+             "programs": {}}
+    reports = lint_named_programs()
+    for rep in reports:
+        assert not rep["findings"], (rep["program"], rep["findings"])
+        rows.append({"name": f"lint/{rep['program']}",
+                     "us_per_call": rep["seconds"] * 1e6,
+                     "derived": f"records={rep['records']} "
+                                f"kinds={','.join(rep['kinds'])} "
+                                f"wire={rep['wire_bytes']}B clean"})
+        bench["programs"][rep["program"]] = {
+            k: rep[k] for k in ("n_devices", "records", "kinds",
+                                "wire_bytes", "byte_budget", "seconds")}
+
+    if jax.device_count() >= 4:
+        rep = lint_program_on_mesh(
+            prg.train_step_program(overlap=True, compress_bits=8, chunks=2,
+                                   bucket_bytes=1 << 20), dcn=2)
+        assert not rep["findings"], rep["findings"]
+        rows.append({"name": "lint/hierarchical_int8_chunked",
+                     "us_per_call": rep["seconds"] * 1e6,
+                     "derived": f"records={rep['records']} "
+                                f"kinds={','.join(rep['kinds'])} "
+                                f"wire={rep['wire_bytes']}B clean (dcn=2)"})
+        bench["hierarchical"] = {
+            k: rep[k] for k in ("n_devices", "records", "kinds",
+                                "wire_bytes", "byte_budget", "seconds")}
+
+    bench["total_seconds"] = sum(r["seconds"] for r in reports)
+    path = Path(__file__).resolve().parent.parent / "BENCH_8.json"
+    path.write_text(json.dumps(bench, indent=2))
+    rows.append({"name": "lint/bench_artifact", "us_per_call": 0.0,
+                 "derived": str(path)})
+    emit("lint", rows, ["name", "us_per_call", "derived"])
+    return rows
+
+
 def main() -> None:
     from .figures import ALL_FIGURES
 
@@ -682,6 +737,7 @@ def main() -> None:
     sections["wire"] = bench_wire
     sections["zero"] = bench_zero
     sections["moe"] = bench_moe
+    sections["lint"] = bench_lint
     failures = []
     for name, fn in sections.items():
         if filters and not any(f in name for f in filters):

@@ -1,0 +1,18 @@
+"""Static analysis of compiled steps against the StepProgram IR (CommLint).
+
+`trace` extracts a structured CollectiveTrace from a jaxpr, `expect` compiles
+a StepProgram into the trace it should produce, and `lint` diffs the two into
+typed findings.  `python -m repro.launch.lint` runs the pass over every named
+program; `launch.train --lint` gates a run on it.
+"""
+from .expect import ExpectedTrace, expected_trace
+from .lint import FINDING_CODES, Finding, lint_step, lint_trace
+from .trace import (COLLECTIVE_KINDS, CollectiveRecord, CollectiveTrace,
+                    count_eqns, prims_of, scans_of, trace_jaxpr, trace_step)
+
+__all__ = [
+    "COLLECTIVE_KINDS", "CollectiveRecord", "CollectiveTrace",
+    "ExpectedTrace", "FINDING_CODES", "Finding",
+    "count_eqns", "expected_trace", "lint_step", "lint_trace",
+    "prims_of", "scans_of", "trace_jaxpr", "trace_step",
+]

@@ -1,0 +1,147 @@
+"""Compile a StepProgram into the ExpectedTrace the lint rules check against.
+
+The StepProgram IR (`core.program`) is the declared intent; the
+CollectiveTrace (`analysis.trace`) is what the compiled step actually does.
+This module derives, from the program alone plus a little mesh/model context,
+everything a rule needs to diff the two:
+
+  * the allowed collective kinds (`StepProgram.expected_collectives`);
+  * the expected wire dtype (QuantizeWire -> int8 payload on the wire);
+  * whether non-scalar psums are forbidden (ZeRO: only the loss pmean and
+    the global-norm combine may psum, and both are scalar);
+  * whether the reduction stream must live inside the overlap scan
+    (Bucketize(reverse=True) at microbatches == 1 — with microbatch
+    accumulation the flush legitimately runs after the interleaved scan);
+  * which jit argnum must be donated (the error-feedback carrier of the
+    int8 dense wire — argnum 3, mirroring `build_explicit_dp_step`);
+  * the concatenate cap (the PR 5 codec packs in O(1) concatenates);
+  * a per-step wire-byte budget from `core.wire.bytes_on_wire` over the
+    padded carrier, with a documented tolerance for realized algorithm
+    overheads (ring round-trips, hierarchical three-phase legs).
+
+The byte budget is None when the caller gives no gradient size (the trace
+then simply isn't byte-checked) and for AllToAll programs, whose payload is
+activation- not gradient-shaped; pass `byte_budget=` explicitly to check
+those.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import FrozenSet, Optional, Tuple
+
+from ..core import wire as wr
+from ..core.program import StepProgram
+
+#: payloads below this many bytes are sideband/control traffic (scalar
+#: clip combines, per-bucket scale stacks), never "the gradient"
+WIDE_BYTES = 256
+
+#: default concatenate cap under a bucketized program: the fused codec packs
+#: with O(1) concatenates; the chunked pipeline adds a few per chunk and the
+#: microbatch accumulation loop a couple per extra microbatch
+CONCAT_CAP = 8
+
+#: headroom multiplier on the logical byte budget — covers realized ring
+#: round-trips (2(n-1)/n), the hierarchical intra/inter/intra legs, and the
+#: one-shot gather, all of which stay within ~2x of the two-leg logical wire
+BYTE_TOLERANCE = 2.5
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpectedTrace:
+    """What the jaxpr of a step compiled from `program` must look like."""
+    program: StepProgram
+    n_devices: int = 1
+    allowed_kinds: FrozenSet[str] = frozenset({"psum"})
+    wire: str = "fp32"                     # expected payload wire dtype
+    forbid_nonscalar_psum: bool = False    # ZeRO: scalar psums only
+    require_reduction_in_scan: bool = False
+    require_donation: Optional[int] = None  # argnum that must be donated
+    max_concats: Optional[int] = None
+    byte_budget: Optional[float] = None    # per-step wire bytes, or None
+    fp32_exempt_axes: Tuple[str, ...] = () # axes whose fp32 leg is planned
+    wide_bytes: int = WIDE_BYTES
+
+    @property
+    def schedule(self) -> str:
+        return self.program.schedule
+
+
+def carrier_bytes(grad_bytes: int, bucket_bytes: Optional[int]) -> Tuple[int, int]:
+    """(padded carrier bytes, bucket count) of a gradient packed at
+    `bucket_bytes` per row — what actually rides the wire.  Per-tensor wire
+    (no Bucketize) pays no padding; the bucket count then only sizes the
+    int8 scale sideband and a leaf-count guess is accurate enough."""
+    if not bucket_bytes:
+        return int(grad_bytes), 64
+    nb = max(math.ceil(grad_bytes / bucket_bytes), 1)
+    return nb * int(bucket_bytes), nb
+
+
+def expected_trace(program: StepProgram, *,
+                   n_devices: int = 1,
+                   grad_bytes: Optional[int] = None,
+                   bucket_bytes: Optional[int] = None,
+                   plan=None,
+                   dcn_axis: Optional[str] = None,
+                   byte_budget: Optional[float] = None,
+                   byte_tolerance: float = BYTE_TOLERANCE) -> ExpectedTrace:
+    """Compile `program` into the ExpectedTrace the linter diffs against.
+
+    `bucket_bytes` defaults to the program's Bucketize node; a node pinned to
+    the plan's crossover (bucket_bytes=None) resolves through `plan` (a
+    CommPlan or CollectivePolicy — anything with `.bucket_bytes`).  The byte
+    budget needs the resolved cap (the carrier pads to whole buckets); with a
+    bucketized program and no way to resolve the cap it stays None rather
+    than guess.  `dcn_axis` names the inter-tier axis on two-level meshes:
+    its fp32 leg is part of the hierarchical plan (the int8 payload rides the
+    intra tier), so fp32 records on it are exempt from the widening rule.
+    """
+    program.validate()
+    kw = program.step_kwargs() if program.schedule != "moe_alltoall" else {}
+    bz = program.node("bucketize")
+    qw = program.node("quantize_wire")
+    cp = program.node("chunked_pipeline")
+    zero = program.schedule == "zero"
+    overlap = bool(bz is not None and bz.reverse)
+    microbatches = int(kw.get("microbatches", 1) or 1)
+    chunks = cp.chunks if cp is not None and cp.chunks else 1
+
+    if bucket_bytes is None and bz is not None:
+        bucket_bytes = bz.bucket_bytes
+    if bucket_bytes is None and plan is not None:
+        bucket_bytes = getattr(plan, "bucket_bytes", None)
+
+    budget = byte_budget
+    if budget is None and grad_bytes is not None \
+            and not (bz is not None and bucket_bytes is None) \
+            and program.schedule != "moe_alltoall":
+        padded, nb = carrier_bytes(grad_bytes, bucket_bytes)
+        fmt = "int8" if qw is not None else "fp32"
+        # two fp32-leg equivalents (RS+AG / psum in and out) plus the
+        # compressed payload leg; microbatching re-issues the stream per
+        # microbatch, a dcn axis adds the inter-tier legs
+        logical = 2.0 * wr.bytes_on_wire(padded, "fp32", nb) \
+            + wr.bytes_on_wire(padded, fmt, nb)
+        budget = byte_tolerance * logical * max(microbatches, 1)
+        if dcn_axis:
+            budget *= 2.0
+
+    return ExpectedTrace(
+        program=program,
+        n_devices=n_devices,
+        allowed_kinds=program.expected_collectives(),
+        wire="int8" if qw is not None else "fp32",
+        forbid_nonscalar_psum=zero,
+        require_reduction_in_scan=(overlap and microbatches == 1
+                                   and not zero),
+        require_donation=(3 if (qw is not None and not zero
+                                and program.schedule == "allreduce")
+                          else None),
+        max_concats=(CONCAT_CAP + 8 * (chunks - 1)
+                     + 4 * (max(microbatches, 1) - 1)
+                     if bz is not None else None),
+        byte_budget=budget,
+        fp32_exempt_axes=(dcn_axis,) if dcn_axis else (),
+    )

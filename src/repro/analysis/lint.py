@@ -1,0 +1,155 @@
+"""CommLint rule engine: diff a CollectiveTrace against an ExpectedTrace.
+
+Every rule anchors on *individual* records — kind, dtype, payload, scan depth,
+axes — never on aggregate counts alone, so a finding always names the exact
+collective that violated the program (the per-collective accounting the
+interconnect papers call for: achieved wire traffic diverges from plan one
+collective at a time, not on average).
+
+Finding codes (the full catalog — stable strings, asserted by tests):
+
+  unplanned-collective              a kind the program never declared
+  wire-dtype-widening               fp32 payload on a leg planned at int8
+  full-gradient-allreduce-under-zero  tensor-sized psum in a ZeRO step
+  collective-outside-overlap-scan   reduction issued outside the scan stream
+  non-scalar-psum                   ZeRO allows only scalar psums (loss/clip)
+  undonated-carrier                 error-feedback carrier not donated
+  unbucketed-concat                 O(leaves) concatenates defeat the codec
+  byte-budget-exceeded              per-step wire bytes above the plan budget
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+from .expect import ExpectedTrace
+from .trace import CollectiveRecord, CollectiveTrace
+
+FINDING_CODES = (
+    "unplanned-collective",
+    "wire-dtype-widening",
+    "full-gradient-allreduce-under-zero",
+    "collective-outside-overlap-scan",
+    "non-scalar-psum",
+    "undonated-carrier",
+    "unbucketed-concat",
+    "byte-budget-exceeded",
+)
+
+_WIDE_DTYPES = ("float32", "float64")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    code: str
+    message: str
+    record: Optional[CollectiveRecord] = None  # None for whole-trace rules
+
+    def __post_init__(self):
+        if self.code not in FINDING_CODES:
+            raise ValueError(f"unknown finding code {self.code!r}")
+
+    def __str__(self) -> str:
+        where = f" [{self.record}]" if self.record is not None else ""
+        return f"{self.code}: {self.message}{where}"
+
+
+def lint_trace(trace: CollectiveTrace, exp: ExpectedTrace) -> List[Finding]:
+    """All findings of `trace` against `exp`, in record order then
+    whole-trace rules.  An empty list is a clean step."""
+    out: List[Finding] = []
+    prog = exp.program.name
+    # the scale sideband of a healthy int8 wire is fp32 but strictly smaller
+    # than the int8 payload it escorts; anything fp32 *larger* than every
+    # int8 record is gradient-shaped, not sideband
+    max_i8 = max((r.payload_bytes for r in trace.records
+                  if r.dtype == "int8"), default=0)
+
+    for rec in trace.records:
+        if rec.kind not in exp.allowed_kinds:
+            out.append(Finding(
+                "unplanned-collective",
+                f"{rec.kind} is not part of program {prog!r} "
+                f"(allowed: {sorted(exp.allowed_kinds)})", rec))
+            continue  # a stray kind shouldn't also trip the wire rules
+        big = (not rec.scalar) and rec.payload_bytes >= exp.wide_bytes
+        exempt = bool(rec.axes) and \
+            set(rec.axes) <= set(exp.fp32_exempt_axes)
+
+        if rec.kind == "psum" and not rec.scalar and exp.forbid_nonscalar_psum:
+            out.append(Finding(
+                "non-scalar-psum",
+                f"psum of {rec.dtype}{list(rec.shape)} under the ZeRO "
+                "schedule; only the loss pmean and the global-norm combine "
+                "may psum, and both are scalar", rec))
+            if big:
+                out.append(Finding(
+                    "full-gradient-allreduce-under-zero",
+                    f"tensor-sized psum ({rec.payload_bytes} B) in program "
+                    f"{prog!r}: the gradient must reduce-scatter, not "
+                    "allreduce", rec))
+
+        if exp.wire == "int8" and big and not exempt \
+                and rec.dtype in _WIDE_DTYPES \
+                and rec.payload_bytes > max_i8 \
+                and (rec.kind == "all_gather" or exp.schedule != "zero"):
+            # ZeRO's RS leg is fp32 by design (error feedback needs exact
+            # sums); only its AG return leg carries the int8 wire
+            out.append(Finding(
+                "wire-dtype-widening",
+                f"{rec.dtype} payload ({rec.payload_bytes} B) on a "
+                f"{rec.kind} leg program {prog!r} plans at int8", rec))
+
+        if exp.require_reduction_in_scan and big and rec.scan_depth == 0:
+            out.append(Finding(
+                "collective-outside-overlap-scan",
+                f"tensor-sized {rec.kind} at scan depth 0 in overlap "
+                f"program {prog!r}: the reduction stream must ride the "
+                "scan-carried issue schedule", rec))
+
+    if exp.require_donation is not None \
+            and exp.require_donation not in trace.donate_argnums:
+        out.append(Finding(
+            "undonated-carrier",
+            f"program {prog!r} carries int8 error feedback but argnum "
+            f"{exp.require_donation} is not donated "
+            f"(donate_argnums={list(trace.donate_argnums)}): the carrier "
+            "buffer is reallocated every step"))
+
+    if exp.max_concats is not None and trace.n_concats > exp.max_concats:
+        out.append(Finding(
+            "unbucketed-concat",
+            f"{trace.n_concats} concatenate ops (cap {exp.max_concats}) in "
+            f"program {prog!r}: the fused codec packs in O(1) concatenates; "
+            "per-leaf concatenation defeats it"))
+
+    if exp.byte_budget is not None:
+        actual = trace.wire_bytes()
+        if actual > exp.byte_budget:
+            out.append(Finding(
+                "byte-budget-exceeded",
+                f"{actual} wire bytes per step vs a budget of "
+                f"{exp.byte_budget:.0f} for program {prog!r} "
+                "(payload x scan trips, scalars excluded)"))
+    return out
+
+
+def lint_step(step, *example_args,
+              expected: Optional[ExpectedTrace] = None,
+              **expect_kw) -> Tuple[CollectiveTrace, List[Finding]]:
+    """Trace a compiled step and lint it in one call.
+
+    With no `expected`, the ExpectedTrace is compiled from `step.program`
+    (set by `runtime.steps.build_program_step` / `build_explicit_dp_step`)
+    and any `expect_kw` forwarded to `analysis.expect.expected_trace`.
+    """
+    from .expect import expected_trace
+    from .trace import trace_step
+
+    trace = trace_step(step, *example_args)
+    if expected is None:
+        program = getattr(step, "program", None)
+        if program is None:
+            raise ValueError("step has no .program attribute; pass expected=")
+        expected = expected_trace(program, **expect_kw)
+    return trace, lint_trace(trace, expected)

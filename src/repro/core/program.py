@@ -175,6 +175,27 @@ class StepProgram:
                              "AllReduce, the ZeRO sequence, or AllToAll")
         return self
 
+    def expected_collectives(self) -> frozenset:
+        """Jaxpr collective kinds a step compiled from this program may emit.
+
+        The contract `analysis.expect` checks against: every schedule may
+        psum (the loss pmean and the global-norm combine are psums), and the
+        planned algorithm families add their wire primitives — ring/pairwise
+        schedules lower to ppermute, the one-shot all-reduce to all_gather,
+        the xla fallbacks to the direct primitive.  What is *absent* is the
+        point: a reduce_scatter inside an allreduce program, or an all_to_all
+        anywhere on the dense path, is an unplanned collective.
+        """
+        kinds = {"psum"}
+        sched = self.schedule
+        if sched == "zero":
+            kinds |= {"reduce_scatter", "all_gather", "ppermute"}
+        elif sched == "moe_alltoall":
+            kinds |= {"all_to_all", "ppermute", "all_gather"}
+        else:
+            kinds |= {"ppermute", "all_gather"}
+        return frozenset(kinds)
+
     # ----------------------------------------------------------------- JSON
     def to_dict(self) -> Dict[str, Any]:
         return {"name": self.name,

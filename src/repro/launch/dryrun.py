@@ -73,6 +73,30 @@ def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
     return mult * n_active * tokens
 
 
+_LINT_CACHE: dict = {}
+
+
+def _lint_report(program) -> dict:
+    """CommLint verdict for one StepProgram on an 8-device CPU submesh —
+    reported next to the roofline so a priced program that would compile to
+    off-plan collectives is visible in the same artifact.  Cached per program
+    name: every cell prices the same plan/zero programs."""
+    if program is None:
+        return None
+    if program.name not in _LINT_CACHE:
+        from .lint import lint_program_on_mesh
+        try:
+            rep = lint_program_on_mesh(program, n_devices=8)
+            _LINT_CACHE[program.name] = dict(
+                program=rep["program"], n_devices=rep["n_devices"],
+                records=rep["records"], findings=rep["findings"],
+                seconds=round(rep["seconds"], 3))
+        except Exception as e:  # noqa: BLE001 — lint must not sink the sweep
+            _LINT_CACHE[program.name] = dict(program=program.name,
+                                             error=f"{type(e).__name__}: {e}")
+    return _LINT_CACHE[program.name]
+
+
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              microbatches: int = 0, out_dir: Path = ARTIFACTS,
              variant: str = "baseline", cfg_override=None, seq_axes=None,
@@ -197,6 +221,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                 dp_wire_bytes_planned=bytes_on_wire(
                     grad_bytes, wspec.inter if multi_pod else wspec.intra,
                     n_buckets),
+                lint=dict(
+                    plan=_lint_report(plan_prog),
+                    zero=_lint_report(prg.train_step_program(zero=True)),
+                ),
                 **overlap_terms_zero,
             )
         cell.update(
@@ -247,13 +275,19 @@ def summarize(cell: dict) -> str:
         return f"{cell['arch']:>20s} {cell['shape']:<12s} {cell['mesh']:<11s} ERROR {cell.get('error', '')[:90]}"
     r = cell["roofline"]
     m = cell["memory"]
+    lint = r.get("lint") or {}
+    lint_tag = ""
+    if lint:
+        n_findings = sum(len((rep or {}).get("findings", ()))
+                         for rep in lint.values())
+        lint_tag = f" lint={'clean' if not n_findings else n_findings}"
     return (f"{cell['arch']:>20s} {cell['shape']:<12s} {cell['mesh']:<11s} "
             f"mb={cell['microbatches']:<3d} mem={m['peak_per_device']/1e9:6.2f}GB "
             f"fits={str(m['fits_16g'])[0]} comp={r['compute_s']*1e3:9.2f}ms "
             f"memt={r['memory_s']*1e3:9.2f}ms ici={r['ici_s']*1e3:8.2f}ms "
             f"dcn={r['dcn_s']*1e3:8.2f}ms dom={r['dominant']:<9s} "
             f"useful={r['useful_compute_ratio']:5.2f} mfu<={r['mfu_bound']:5.2f} "
-            f"[compile {cell['compile_s']:.0f}s]")
+            f"[compile {cell['compile_s']:.0f}s]{lint_tag}")
 
 
 def main():

@@ -74,20 +74,25 @@ def _parse_group(line: str) -> Tuple[int, int]:
         first = g[2:].split("}")[0]
         ids = [int(x) for x in first.split(",") if x.strip()]
         return max(len(ids), 1), (max(ids) - min(ids)) if ids else 0
-    # iota form: [G,S]<=[N...] with optional T(perm)
+    # iota form: [G,S]<=[N...] with optional T(perm); malformed or truncated
+    # group annotations (hand-written / trivial HLO) degrade to "no groups"
+    # instead of raising out of the whole analysis
     import numpy as np
-    left = [int(x) for x in re.findall(r"\d+", g.split("<=")[0])]
-    right_part = g.split("<=")[1]
-    reshape = [int(x) for x in re.findall(r"\d+", right_part.split("T")[0].strip("[] "))]
-    tperm = re.search(r"T\(([\d,]+)\)", right_part)
-    ngroups, gsize = (left + [1, 1])[:2] if len(left) >= 2 else (1, left[0] if left else 1)
-    n = int(np.prod(reshape)) if reshape else ngroups * gsize
-    ids = np.arange(n).reshape(reshape if reshape else (n,))
-    if tperm:
-        ids = ids.transpose([int(x) for x in tperm.group(1).split(",")])
-    ids = ids.reshape(ngroups, gsize)
-    span = int(ids[0].max() - ids[0].min()) if ids.size else 0
-    return gsize, span
+    try:
+        left = [int(x) for x in re.findall(r"\d+", g.split("<=")[0])]
+        right_part = g.split("<=")[1]
+        reshape = [int(x) for x in re.findall(r"\d+", right_part.split("T")[0].strip("[] "))]
+        tperm = re.search(r"T\(([\d,]+)\)", right_part)
+        ngroups, gsize = (left + [1, 1])[:2] if len(left) >= 2 else (1, left[0] if left else 1)
+        n = int(np.prod(reshape)) if reshape else ngroups * gsize
+        ids = np.arange(n).reshape(reshape if reshape else (n,))
+        if tperm:
+            ids = ids.transpose([int(x) for x in tperm.group(1).split(",")])
+        ids = ids.reshape(ngroups, gsize)
+        span = int(ids[0].max() - ids[0].min()) if ids.size else 0
+        return gsize, span
+    except (IndexError, ValueError):
+        return 1, 0
 
 
 def _split_computations(hlo_text: str) -> Dict[str, List[str]]:
@@ -180,7 +185,11 @@ class CollectiveStats:
 def analyze_collectives(hlo_text: str, pod_stride: int = 0) -> CollectiveStats:
     """pod_stride: device-id stride of the pod axis (data*model = 256 for the
     (2,16,16) mesh); 0 = single pod (everything ICI)."""
+    if not hlo_text or not hlo_text.strip():
+        return CollectiveStats()
     comps = _split_computations(hlo_text)
+    if not comps:
+        return CollectiveStats()
     mult = _multipliers(comps)
     # map the alias back: ops under the entry computation get multiplier of entry
     stats = CollectiveStats()
@@ -291,7 +300,11 @@ def _collect_trip_counts(comps) -> set:
 
 
 def analyze_cost(hlo_text: str) -> ModuleCost:
+    if not hlo_text or not hlo_text.strip():
+        return ModuleCost()
     comps = _split_computations(hlo_text)
+    if not comps:
+        return ModuleCost()
     mult = _multipliers(comps)
     types = _build_type_map(hlo_text)
     trips = _collect_trip_counts(comps)
@@ -382,25 +395,10 @@ def analyze_cost(hlo_text: str) -> ModuleCost:
 # ------------------------------------------------------------- jaxpr counting
 def count_jaxpr_eqns(closed, name: Optional[str] = None) -> int:
     """Count jaxpr equations (all, or those of primitive `name`), recursing
-    into nested closed jaxprs (scan/cond/remat bodies).  The jaxpr-level
-    sibling of the HLO byte accounting above — used by the wire-codec op-count
-    regressions (tests and `benchmarks.run wire`)."""
-    import jax
+    into nested closed jaxprs (scan/cond/remat bodies).  Thin shim over the
+    shared walker in `analysis.trace` (which absorbed this function's body);
+    kept so the wire-codec op-count regressions and `benchmarks.run wire`
+    don't churn."""
+    from ..analysis.trace import count_eqns
 
-    cnt = 0
-
-    def walk(jaxpr):
-        nonlocal cnt
-        for eqn in jaxpr.eqns:
-            if name is None or eqn.primitive.name == name:
-                cnt += 1
-            for v in eqn.params.values():
-                vals = v if isinstance(v, (tuple, list)) else (v,)
-                for u in vals:
-                    if isinstance(u, jax.core.ClosedJaxpr):
-                        walk(u.jaxpr)
-                    elif isinstance(u, jax.core.Jaxpr):
-                        walk(u)
-
-    walk(closed.jaxpr if hasattr(closed, "jaxpr") else closed)
-    return cnt
+    return count_eqns(closed, name)

@@ -155,6 +155,10 @@ def main(argv=None):
                          "params at the wire dtype; --compress-bits 8 makes "
                          "the all-gather leg int8")
     ap.add_argument("--straggler-threshold", type=float, default=2.5)
+    ap.add_argument("--lint", action="store_true",
+                    help="statically lint the compiled step against its "
+                         "StepProgram before training (analysis.lint); any "
+                         "finding refuses to start the run")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -216,6 +220,24 @@ def main(argv=None):
     if program is not None:
         print(f"program: {program.name} "
               f"({' -> '.join(nd.kind for nd in program.nodes)})")
+    if args.lint:
+        if program is None:
+            raise SystemExit("--lint needs a step program to lint against: "
+                             "the XLA SPMD path (no --explicit-dp/--overlap/"
+                             "--zero) chooses its own collectives")
+        from .lint import lint_program_on_mesh
+        n_data = mesh.shape.get("data", 1) if mesh is not None else 1
+        n_pod = mesh.shape.get("pod", 1) if mesh is not None else 1
+        rep = lint_program_on_mesh(program, n_devices=n_pod * n_data,
+                                   policy=policy, dcn=n_pod)
+        if rep["findings"]:
+            for f in rep["findings"]:
+                print(f"lint: {f}", file=sys.stderr)
+            raise SystemExit(
+                f"lint: {len(rep['findings'])} finding(s) on program "
+                f"{program.name!r} — refusing to start the run")
+        print(f"lint: program {program.name} clean "
+              f"({rep['records']} collectives, {rep['seconds']:.2f}s)")
 
     trainer = Trainer(
         cfg, shape,

@@ -708,6 +708,7 @@ def build_explicit_dp_step(model: Model, opt: adamw.OptConfig, mesh, axis: str =
 
     step._cache = cache  # introspectable by tests
     step.program = step_program
+    step.donate_argnums = donate  # read by analysis.trace.trace_step
     step.init_error_state = make_error_state
     step.init_opt_state = make_opt_state
     step.abstract_opt_state = make_abstract_opt_state

@@ -16,10 +16,10 @@ SRC = str(REPO / "src")
 
 def count_eqns(closed, name: str = None) -> int:
     """Count jaxpr equations (all of them, or those of primitive `name`) —
-    the shared walker lives in `repro.launch.hlo_analysis`."""
-    from repro.launch.hlo_analysis import count_jaxpr_eqns
+    thin shim; the shared walker lives in `repro.analysis.trace`."""
+    from repro.analysis.trace import count_eqns as _count
 
-    return count_jaxpr_eqns(closed, name)
+    return _count(closed, name)
 
 
 def run_devices(code: str, n_devices: int = 8, timeout: int = 420) -> str:

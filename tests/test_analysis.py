@@ -1,0 +1,294 @@
+"""CommLint: the shared jaxpr walker, trace extraction, the StepProgram ->
+ExpectedTrace compiler, golden (clean) traces for every named program, and one
+negative test per finding code — each asserting the exact code, anchored on
+individual collective records."""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax import lax
+
+import repro.compat  # noqa: F401
+from repro.analysis import (COLLECTIVE_KINDS, FINDING_CODES, Finding,
+                            count_eqns, expected_trace, lint_trace, prims_of,
+                            scans_of, trace_jaxpr, trace_step)
+from repro.core import program as prg
+from repro.core.autotune import CollectivePolicy
+from repro.launch.lint import (_LintModel, _dense_fixture, _make_mesh,
+                               lint_program_on_mesh)
+from repro.launch.lint import main as lint_main
+from repro.optim import adamw
+from repro.runtime.steps import build_program_step
+
+from .helpers import run_devices
+
+BUCKET = 4 * 128  # tiny bucket: the 1.6 KiB toy gradient packs into 4 rows
+
+
+# ---------------------------------------------------------------- the walker
+def test_walker_counts_nested_eqns():
+    def f(x):
+        def body(c, _):
+            return c + 1.0, c * 2.0
+        c, ys = lax.scan(body, x, None, length=5)
+        return c + jnp.sum(ys)
+
+    jx = jax.make_jaxpr(f)(0.0)
+    assert count_eqns(jx, "scan") == 1
+    assert count_eqns(jx, "add") >= 1  # the body's add, found through the scan
+    assert count_eqns(jx) > count_eqns(jx, "scan")
+    assert "scan" in prims_of(jx) and "add" in prims_of(jx)
+    scans = scans_of(jx)
+    assert len(scans) == 1
+    length, body_prims = scans[0]
+    assert length == 5 and "add" in body_prims
+
+
+def test_trace_record_fields():
+    jx = jax.make_jaxpr(lambda x: lax.psum(x, "i"),
+                        axis_env=[("i", 4)])(jnp.ones((8,), jnp.float32))
+    tr = trace_jaxpr(jx, donate_argnums=(3,))
+    assert tr.donate_argnums == (3,)
+    (rec,) = tr.records
+    assert rec.kind == "psum" and rec.axes == ("i",)
+    assert rec.dtype == "float32" and rec.shape == (8,)
+    assert rec.payload_bytes == 32 and not rec.scalar
+    assert rec.scan_depth == 0 and rec.scan_trips == 1
+    assert tr.wire_bytes() == 32 and tr.counts() == {"psum": 1}
+
+    # scalar psums are flagged as such and excluded from wire accounting
+    js = jax.make_jaxpr(lambda x: lax.psum(x, "i"),
+                        axis_env=[("i", 4)])(jnp.float32(1.0))
+    ts = trace_jaxpr(js)
+    assert ts.records[0].scalar
+    assert ts.wire_bytes() == 0 and ts.wire_bytes(include_scalar=True) == 4
+
+
+def test_trace_canonicalizes_psum_scatter_and_gather():
+    def f(x):
+        return lax.all_gather(lax.psum_scatter(x, "i", tiled=True), "i")
+
+    jx = jax.make_jaxpr(f, axis_env=[("i", 2)])(jnp.ones((4,), jnp.float32))
+    tr = trace_jaxpr(jx)
+    assert tr.kinds() == {"reduce_scatter", "all_gather"}
+    assert tr.kinds() <= COLLECTIVE_KINDS
+
+
+def test_trace_scan_nesting_multiplies_wire_bytes():
+    def f(x):
+        def body(c, _):
+            return lax.psum(c, "i"), None
+        c, _ = lax.scan(body, x, None, length=3)
+        return c
+
+    jx = jax.make_jaxpr(f, axis_env=[("i", 2)])(jnp.ones((4,), jnp.float32))
+    (rec,) = trace_jaxpr(jx).records
+    assert rec.scan_depth == 1 and rec.scan_trips == 3
+    assert rec.payload_bytes == 16 and rec.wire_bytes == 48
+
+
+# ------------------------------------------------- expect: budget resolution
+def test_carrier_bytes_and_budget_resolution():
+    from repro.analysis.expect import carrier_bytes
+
+    assert carrier_bytes(1000, 512) == (1024, 2)   # pads to whole rows
+    assert carrier_bytes(1000, None) == (1000, 64)  # per-tensor: no padding
+    # a Bucketize node pinned to the plan crossover can't be priced without
+    # the plan: the budget stays None rather than guess the cap
+    p = prg.train_step_program()
+    assert p.has("bucketize")
+    assert expected_trace(p, grad_bytes=1 << 20).byte_budget is None
+    pol = CollectivePolicy.from_model()
+    e = expected_trace(p, grad_bytes=1 << 20, plan=pol)
+    assert e.byte_budget is not None and e.byte_budget > 0
+    # an explicit node cap needs no plan
+    e2 = expected_trace(prg.train_step_program(bucket_bytes=BUCKET),
+                        grad_bytes=1 << 20)
+    assert e2.byte_budget is not None
+
+
+def test_expected_collectives_per_schedule():
+    ar = prg.train_step_program().expected_collectives()
+    z = prg.train_step_program(zero=True).expected_collectives()
+    moe = prg.moe_step_program().expected_collectives()
+    assert ar <= COLLECTIVE_KINDS and "reduce_scatter" not in ar
+    assert {"reduce_scatter", "all_gather"} <= z
+    assert "all_to_all" in moe and "all_to_all" not in ar
+
+
+def test_finding_code_catalog_is_closed():
+    assert len(set(FINDING_CODES)) == 8
+    with pytest.raises(ValueError, match="unknown finding code"):
+        Finding("misaligned-warp", "not a real rule")
+
+
+# ----------------------------------------------------------- hlo-text guards
+def test_hlo_analysis_guards_empty_and_malformed():
+    from repro.launch.hlo_analysis import (_parse_group, analyze_collectives,
+                                           analyze_cost)
+
+    for text in ("", "   \n  "):
+        stats = analyze_collectives(text)
+        assert stats.ici_bytes == 0.0 and stats.dcn_bytes == 0.0
+        assert stats.by_op == {}
+        cost = analyze_cost(text)
+        assert cost.flops == 0.0 and cost.bytes == 0.0
+    # truncated iota group annotations degrade to "no groups", not a raise
+    assert _parse_group("replica_groups=[2,4]<=") == (1, 0)
+    assert _parse_group("no groups here at all") == (1, 0)
+
+
+# -------------------------------------------------- golden traces (1 device)
+@pytest.mark.parametrize("name", sorted(prg.NAMED_PROGRAMS))
+def test_named_program_lints_clean(name):
+    rep = lint_program_on_mesh(prg.named_program(name), n_devices=1)
+    assert rep["codes"] == [], rep["findings"]
+    if rep["schedule"] != "moe_alltoall":
+        # (the degenerate 1-device mesh traces the MoE exchange away; the
+        # multi-device golden below pins its 2 all_to_alls)
+        assert rep["records"] >= 1
+    assert set(rep["kinds"]) <= COLLECTIVE_KINDS
+
+
+def test_lint_cli_rejects_unknown_program():
+    with pytest.raises(SystemExit, match="unknown program"):
+        lint_main(["warp_speed"])
+
+
+# ------------------------------------------------ negatives: one per code
+# The xla-forcing legacy policy pins the dense wire to plain psum emission,
+# so each mutation lands on a deterministic jaxpr.
+def _xla_policy():
+    return CollectivePolicy({2: []}, {2: []}, {"source": "measured"})
+
+
+@functools.lru_cache(maxsize=None)
+def _built_trace(**flags):
+    """Trace a step built from train_step_program(**flags) on one device."""
+    mesh = _make_mesh((1,), ("data",))
+    params, batch = _dense_fixture(1)
+    opt = adamw.OptConfig(peak_lr=1e-2, warmup_steps=0, decay_steps=10)
+    step = build_program_step(_LintModel(), opt, mesh,
+                              prg.train_step_program(**flags),
+                              policy=_xla_policy())
+    return trace_step(step, params, step.init_opt_state(params), batch,
+                      step.init_error_state(params))
+
+
+def _codes(findings):
+    return sorted({f.code for f in findings})
+
+
+def test_negative_gradient_allreduce_under_zero():
+    """An allreduce-built step linted against the ZeRO program: the
+    tensor-sized gradient psums violate both scalar-only rules."""
+    tr = _built_trace(bucket_bytes=BUCKET)
+    fs = lint_trace(tr, expected_trace(prg.train_step_program(zero=True)))
+    assert _codes(fs) == ["full-gradient-allreduce-under-zero",
+                          "non-scalar-psum"], [str(f) for f in fs]
+    assert all(f.record is not None and not f.record.scalar for f in fs)
+
+
+def test_negative_wire_dtype_widening():
+    """An fp32-wire step against the int8 program: every gradient-sized fp32
+    record is a widened leg (the scalar clip combines stay exempt)."""
+    tr = _built_trace(bucket_bytes=BUCKET)
+    fs = lint_trace(tr, expected_trace(
+        prg.train_step_program(compress_bits=8)))
+    assert "wire-dtype-widening" in _codes(fs), [str(f) for f in fs]
+    wides = [f for f in fs if f.code == "wire-dtype-widening"]
+    assert all(f.record.dtype == "float32" and
+               f.record.payload_bytes >= 256 for f in wides)
+
+
+def test_negative_collective_outside_overlap_scan():
+    """A non-overlap step against the overlap program: the bucket reductions
+    issue at scan depth 0 instead of riding the issue schedule."""
+    tr = _built_trace(bucket_bytes=BUCKET)
+    fs = lint_trace(tr, expected_trace(
+        prg.train_step_program(overlap=True, bucket_bytes=BUCKET)))
+    assert _codes(fs) == ["collective-outside-overlap-scan"], \
+        [str(f) for f in fs]
+    assert all(f.record.scan_depth == 0 for f in fs)
+
+
+def test_negative_undonated_carrier():
+    """The int8 overlap step is clean as built; stripping the donation of the
+    error-feedback carrier (argnum 3) is the one finding introduced."""
+    tr = _built_trace(overlap=True, compress_bits=8, bucket_bytes=BUCKET)
+    exp = expected_trace(prg.train_step_program(
+        overlap=True, compress_bits=8, bucket_bytes=BUCKET))
+    assert exp.require_donation == 3
+    assert lint_trace(tr, exp) == [], \
+        [str(f) for f in lint_trace(tr, exp)]
+    stripped = dataclasses.replace(tr, donate_argnums=())
+    fs = lint_trace(stripped, exp)
+    assert _codes(fs) == ["undonated-carrier"], [str(f) for f in fs]
+
+
+def test_negative_unplanned_collective():
+    """A ZeRO-built step against the allreduce program: reduce_scatter is a
+    kind the program never declared — and a stray kind does not also trip
+    the wire rules (it reports once, as itself)."""
+    tr = _built_trace(zero=True)
+    fs = lint_trace(tr, expected_trace(
+        prg.train_step_program(bucket_bytes=0)))
+    assert _codes(fs) == ["unplanned-collective"], [str(f) for f in fs]
+    assert {f.record.kind for f in fs} == {"reduce_scatter"}
+
+
+def test_negative_unbucketed_concat():
+    """Per-leaf concatenation (O(leaves) concatenates) against a bucketized
+    program's O(1) codec cap."""
+    def pack(xs):
+        return functools.reduce(
+            lambda a, b: jnp.concatenate([a, b]), xs)
+
+    jx = jax.make_jaxpr(pack)([jnp.ones((4,), jnp.float32)] * 12)
+    tr = trace_jaxpr(jx)
+    assert tr.n_concats == 11
+    fs = lint_trace(tr, expected_trace(
+        prg.train_step_program(bucket_bytes=BUCKET)))
+    assert _codes(fs) == ["unbucketed-concat"], [str(f) for f in fs]
+
+
+def test_negative_byte_budget_exceeded():
+    """An explicit (absurdly small) budget: the clean allreduce step exceeds
+    it through exact payload x scan-trip accounting, scalars excluded."""
+    tr = _built_trace(bucket_bytes=BUCKET)
+    fs = lint_trace(tr, expected_trace(
+        prg.train_step_program(bucket_bytes=BUCKET), byte_budget=1.0))
+    assert _codes(fs) == ["byte-budget-exceeded"], [str(f) for f in fs]
+    # and the real derived budget clears the same trace
+    grad = sum(p.size * p.dtype.itemsize
+               for p in jax.tree.leaves(_dense_fixture(1)[0]))
+    clean = lint_trace(tr, expected_trace(
+        prg.train_step_program(bucket_bytes=BUCKET), grad_bytes=grad))
+    assert clean == [], [str(f) for f in clean]
+
+
+# --------------------------------------------- golden traces (multi-device)
+LINT_CLI = r"""
+import repro.compat
+from repro.core import program as prg
+from repro.launch.lint import lint_program_on_mesh, main
+
+assert main(["--all-named-programs"]) == 0
+# the hierarchical two-tier path: int8 chunked pipeline on a pod x data mesh
+rep = lint_program_on_mesh(
+    prg.train_step_program(overlap=True, compress_bits=8, chunks=2,
+                           bucket_bytes=1 << 20),
+    dcn=2)
+assert rep["codes"] == [], rep["findings"]
+print("ALL_OK")
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("n", [4, 8])
+def test_lint_cli_clean_multi_device(n):
+    """`python -m repro.launch.lint --all-named-programs` exits 0 — every
+    named program traces clean on real multi-device meshes."""
+    assert "ALL_OK" in run_devices(LINT_CLI, n, timeout=560)

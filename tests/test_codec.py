@@ -313,7 +313,7 @@ def test_overlap_step_single_fused_pack_and_unpack():
 
 # ------------------------------------------------ runtime numerics (multi-dev)
 INT8_OVERLAP = r"""
-import jax, jax.numpy as jnp, numpy as np, re
+import jax, jax.numpy as jnp, numpy as np
 import repro.compat
 from jax.sharding import AxisType
 from repro.configs import get_config
@@ -347,13 +347,21 @@ ovl = rsteps.build_explicit_dp_step(model, opt, mesh, "data", compress_bits=8,
                                     overlap=True, bucket_bytes=bb)
 err = ovl.init_error_state(params)
 assert err.ndim == 2, err.shape  # carrier-shaped error state
-jx = str(jax.make_jaxpr(lambda p, o, b, e: ovl(p, o, b, e))(
-    params, ostate, batch, err))
+from repro.analysis import expected_trace, lint_trace, trace_jaxpr
+jx = jax.make_jaxpr(lambda p, o, b, e: ovl(p, o, b, e))(
+    params, ostate, batch, err)
+tr = trace_jaxpr(jx, donate_argnums=ovl.donate_argnums)
 # the wire is per-bucket int8 inside a scan: i8 gathers appear once (in the
 # scan body), not once per leaf like the per-tensor baseline
 n_leaves = len(jax.tree.leaves(params))
-i8 = re.findall(r"i8\[[^\]]*\] = all_gather", jx)
+i8 = [r for r in tr.records if r.kind == "all_gather" and r.dtype == "int8"]
 assert 1 <= len(i8) < n_leaves, (len(i8), n_leaves)
+assert all(r.scan_depth >= 1 for r in i8), i8
+# and the full CommLint rule catalog agrees the step matches its program
+grad_bytes = sum(p.size * 4 for p in jax.tree.leaves(params))
+fs = lint_trace(tr, expected_trace(ovl.program, n_devices=4,
+                                   grad_bytes=grad_bytes))
+assert not fs, [str(f) for f in fs]
 op, _, om, oe = ovl(params, ostate, batch, err)
 assert oe.ndim == 2
 d_fp = delta(bp, op); d_pt = delta(pp, op)
@@ -702,27 +710,15 @@ def test_zero_step_dispatches_rs_ag_no_gradient_allreduce():
     assert plan.stats.get("all_gather_calls", 0) > 0
     assert plan.stats.get("all_reduce_calls", 0) == 0
 
-    # every psum operand is scalar: no full-gradient allreduce anywhere
-    def walk(jaxpr, fn):
-        for eqn in jaxpr.eqns:
-            fn(eqn)
-            for val in eqn.params.values():
-                vals = val if isinstance(val, (tuple, list)) else (val,)
-                for u in vals:
-                    if isinstance(u, jax.core.ClosedJaxpr):
-                        walk(u.jaxpr, fn)
-                    elif isinstance(u, jax.core.Jaxpr):
-                        walk(u, fn)
+    # every psum operand is scalar: no full-gradient allreduce anywhere —
+    # the CommLint non-scalar-psum / full-gradient-allreduce-under-zero rules
+    # over the structured trace (analysis.trace replaces the hand-rolled walk)
+    from repro.analysis import expected_trace, lint_trace, trace_jaxpr
 
-    bad = []
-
-    def check(eqn):
-        if eqn.primitive.name == "psum" and any(
-                getattr(v.aval, "ndim", 0) > 0 for v in eqn.invars):
-            bad.append(eqn)
-
-    walk(jx.jaxpr, check)
-    assert not bad, f"non-scalar psum (gradient allreduce?) in zero step: {bad}"
+    tr = trace_jaxpr(jx, donate_argnums=step.donate_argnums)
+    assert all(r.scalar for r in tr.of_kind("psum"))
+    findings = lint_trace(tr, expected_trace(step.program, plan=policy))
+    assert not findings, [str(f) for f in findings]
 
     # the replicated baseline, for contrast, does allreduce gradients
     plan.reset_stats()

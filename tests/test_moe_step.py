@@ -87,21 +87,8 @@ from repro.optim import adamw
 from repro.runtime import moe_step as ms
 from repro.runtime import steps as rsteps
 
-def walk(jaxpr, fn):
-    for eqn in jaxpr.eqns:
-        fn(eqn)
-        for v in eqn.params.values():
-            vals = v if isinstance(v, (tuple, list)) else (v,)
-            for u in vals:
-                if isinstance(u, jax.core.ClosedJaxpr):
-                    walk(u.jaxpr, fn)
-                elif isinstance(u, jax.core.Jaxpr):
-                    walk(u, fn)
-
-def prims_of(closed):
-    names = set()
-    walk(closed.jaxpr, lambda e: names.add(e.primitive.name))
-    return names
+# the shared walker (analysis.trace) replaced this file's hand-rolled copy
+from repro.analysis import expected_trace, lint_trace, prims_of, trace_jaxpr
 
 cfg = get_config("deepseek-moe-16b").reduced()
 mesh = jax.make_mesh((4,), ("data",), axis_types=(AxisType.Auto,))
@@ -123,6 +110,12 @@ assert "all_to_all" in prims, prims
 assert plan.stats.get("all_to_all_calls") == 2, plan.stats
 assert plan.stats.get("all_to_all_algo/xla") == 2, plan.stats
 assert plan.stats.get("all_reduce_calls", 0) >= 1, plan.stats
+# CommLint: the traced MoE step stays inside its program's collective set
+# (dispatch + combine, plus the vjp's transposed exchanges)
+tr = trace_jaxpr(jx)
+assert len(tr.of_kind("all_to_all")) >= 2, tr.counts()
+fs = lint_trace(tr, expected_trace(step.program, n_devices=4, plan=policy))
+assert not fs, [str(f) for f in fs]
 print("ok jaxpr xla", sorted(k for k in plan.stats))
 
 # --- group boundary forces pairwise: ppermute rotations, no fused alltoall ---
@@ -136,6 +129,10 @@ prims_pw = prims_of(jx_pw)
 assert "ppermute" in prims_pw, prims_pw
 assert "all_to_all" not in prims_pw, prims_pw
 assert plan_pw.stats.get("all_to_all_algo/pairwise") == 2, plan_pw.stats
+# pairwise lowers to ppermute rotations — still within the program's set
+fs_pw = lint_trace(trace_jaxpr(jx_pw),
+                   expected_trace(step_pw.program, n_devices=4, plan=pol_pw))
+assert not fs_pw, [str(f) for f in fs_pw]
 print("ok jaxpr pairwise")
 
 # --- numerics: loss decreases, and n=4 matches n=1 (same global batch) ---

@@ -191,32 +191,11 @@ from repro.models import build_model
 from repro.optim import adamw
 from repro.runtime import steps as rsteps
 
-COLL = {"ppermute", "psum", "all_gather", "all_to_all", "psum_scatter"}
-
-def walk(jaxpr, fn):
-    for eqn in jaxpr.eqns:
-        fn(eqn)
-        for v in eqn.params.values():
-            vals = v if isinstance(v, (tuple, list)) else (v,)
-            for u in vals:
-                if isinstance(u, jax.core.ClosedJaxpr):
-                    walk(u.jaxpr, fn)
-                elif isinstance(u, jax.core.Jaxpr):
-                    walk(u, fn)
-
-def prims_of(closed):
-    names = set()
-    walk(closed.jaxpr if hasattr(closed, "jaxpr") else closed,
-         lambda e: names.add(e.primitive.name))
-    return names
-
-def scans_of(closed):
-    found = []
-    def visit(eqn):
-        if eqn.primitive.name == "scan":
-            found.append((eqn.params["length"], prims_of(eqn.params["jaxpr"])))
-    walk(closed.jaxpr, visit)
-    return found
+# the shared walker (analysis.trace) replaced this file's hand-rolled
+# walk/prims_of/scans_of copies
+from repro.analysis import COLLECTIVE_KINDS as COLL
+from repro.analysis import expected_trace, lint_trace, prims_of, scans_of, \
+    trace_jaxpr
 
 cfg = get_config("smollm-135m").reduced()
 shape = ShapeConfig("t", 32, 8, "train")
@@ -247,6 +226,13 @@ assert any(ln == n_buckets for ln, ps in bucket_scans), \
 # the issue scan is comm-only: reductions are separated from the backward blob
 assert any(ln == n_buckets and "dot_general" not in ps
            for ln, ps in bucket_scans)
+# CommLint: the compiled step matches the overlap program end to end (every
+# tensor-sized collective inside the scan, wire bytes within budget)
+grad_bytes = sum(p.size * 4 for p in jax.tree.leaves(params))
+fs = lint_trace(trace_jaxpr(jx1, donate_argnums=step1.donate_argnums),
+                expected_trace(step1.program, n_devices=4,
+                               grad_bytes=grad_bytes))
+assert not fs, [str(f) for f in fs]
 op, oo, om, _ = step1(params, ostate, batch, err)
 d = max(float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
         for a, b in zip(jax.tree.leaves(bp), jax.tree.leaves(op)))
@@ -291,7 +277,7 @@ def test_overlap_step_schedule_and_numerics():
 
 
 INT8_WIRE = r"""
-import jax, jax.numpy as jnp, re
+import jax, jax.numpy as jnp
 import repro.compat
 from jax.sharding import AxisType
 from repro.configs import get_config
@@ -311,15 +297,24 @@ batch = model.make_batch(shape)
 err = rsteps.init_error_state(params)
 
 step = rsteps.build_explicit_dp_step(model, opt, mesh, "data", compress_bits=8)
-txt = str(jax.make_jaxpr(lambda p, o, b, e: step(p, o, b, e))(
-    params, ostate, batch, err))
+from repro.analysis import expected_trace, lint_trace, trace_jaxpr
+jx = jax.make_jaxpr(lambda p, o, b, e: step(p, o, b, e))(
+    params, ostate, batch, err)
+tr = trace_jaxpr(jx, donate_argnums=step.donate_argnums)
 n_leaves = len(jax.tree.leaves(params))
-i8 = re.findall(r"i8\[[^\]]*\] = all_gather", txt)
-# per-tensor fp32 scale gathers are scalars -> f32[4] after gather; the bug
-# was a *tensor-sized* fp32 payload on the wire (all_gather of the dequant)
-big_f32 = re.findall(r"f32\[\d{3,}[^\]]*\] = all_gather", txt)
+gathers = tr.of_kind("all_gather")
+i8 = [r for r in gathers if r.dtype == "int8"]
+# per-tensor fp32 scale gathers are scalar payloads; the bug was a
+# *tensor-sized* fp32 payload on the wire (all_gather of the dequant) —
+# which is exactly CommLint's wire-dtype-widening rule
+big_f32 = [r for r in gathers if r.dtype == "float32"
+           and not r.scalar and r.payload_bytes >= 400]
 assert len(i8) == n_leaves, (len(i8), n_leaves)
 assert not big_f32, big_f32
+grad_bytes = sum(p.size * 4 for p in jax.tree.leaves(params))
+fs = lint_trace(tr, expected_trace(step.program, n_devices=4,
+                                   grad_bytes=grad_bytes))
+assert not fs, [str(f) for f in fs]
 
 # wire accounting: int8 payload + one fp32 scale per tensor, per peer
 sizes = [p.size for p in jax.tree.leaves(params)]

@@ -195,6 +195,8 @@ from repro.models import build_model
 from repro.optim import adamw
 from repro.runtime import steps as rsteps
 
+from repro.analysis import expected_trace, lint_trace, trace_jaxpr
+
 cfg = get_config("smollm-135m").reduced()
 shape = ShapeConfig("t", 32, 8, "train")
 mesh = jax.make_mesh((4,), ("data",), axis_types=(AxisType.Auto,))
@@ -230,8 +232,14 @@ for flags, dcn in CASES:
             ostate = step.init_opt_state(params)
         else:
             ostate = adamw.init_opt_state(params)
-        p2, _, metrics, _ = step(params, ostate, batch,
-                                 step.init_error_state(params))
+        err = step.init_error_state(params)
+        # CommLint: both builds honour the shared program's collective contract
+        jx = jax.make_jaxpr(lambda p, o, b, e: step(p, o, b, e))(
+            params, ostate, batch, err)
+        tr = trace_jaxpr(jx, donate_argnums=getattr(step, "donate_argnums", ()))
+        fs = lint_trace(tr, expected_trace(program, n_devices=4, dcn_axis=dcn))
+        assert not fs, (flags, [str(f) for f in fs])
+        p2, _, metrics, _ = step(params, ostate, batch, err)
         outs.append((jax.device_get(p2), float(metrics["loss"])))
     (pa, la), (pb, lb) = outs
     assert la == lb, (flags, la, lb)
