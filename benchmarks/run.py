@@ -722,6 +722,72 @@ def bench_lint():
     return rows
 
 
+def bench_hlolint():
+    """ScheduleLint compiled-HLO section (PR 9): every named StepProgram is
+    compiled, its post-SPMD module parsed into an HloTrace and cross-checked
+    against the jaxpr CollectiveTrace and the program IR — all clean, by
+    assert, with jaxpr-vs-HLO per-family wire bytes within the 5% tolerance
+    — plus the hierarchical two-tier chunked-int8 path.  The per-program
+    wall time now includes real XLA compilation (the cost of the `--hlo` CI
+    gate).  Writes BENCH_9.json at the repo root so the trajectory
+    accumulates across PRs."""
+    import json
+    from pathlib import Path
+
+    import jax
+    import repro.compat  # noqa: F401
+    from repro.core import program as prg
+    from repro.launch.lint import lint_named_programs, lint_program_on_mesh
+    from .common import emit
+
+    rows = []
+    bench = {"pr": 9, "section": "hlolint", "devices": jax.device_count(),
+             "programs": {}}
+    reports = lint_named_programs(hlo=True)
+    for rep in reports:
+        assert not rep["findings"], (rep["program"], rep["findings"])
+        h = rep["hlo"]
+        worst = max((d["rel_delta"] for d in h["byte_deltas"].values()),
+                    default=0.0)
+        assert worst <= 0.05, (rep["program"], h["byte_deltas"])
+        rows.append({"name": f"hlolint/{rep['program']}",
+                     "us_per_call": rep["seconds"] * 1e6,
+                     "derived": f"jaxpr={rep['records']} hlo={h['records']} "
+                                f"async={h['n_async']} "
+                                f"max_delta={worst:.1%} clean"})
+        bench["programs"][rep["program"]] = {
+            "n_devices": rep["n_devices"], "seconds": rep["seconds"],
+            "jaxpr_records": rep["records"], "hlo_records": h["records"],
+            "hlo_ops": h["ops"], "n_async": h["n_async"],
+            "byte_deltas": h["byte_deltas"],
+            "static_overlap": h["static_overlap"],
+        }
+
+    if jax.device_count() >= 4:
+        rep = lint_program_on_mesh(
+            prg.train_step_program(overlap=True, compress_bits=8, chunks=2,
+                                   bucket_bytes=1 << 20), dcn=2, hlo=True)
+        assert not rep["findings"], rep["findings"]
+        h = rep["hlo"]
+        rows.append({"name": "hlolint/hierarchical_int8_chunked",
+                     "us_per_call": rep["seconds"] * 1e6,
+                     "derived": f"jaxpr={rep['records']} hlo={h['records']} "
+                                f"ops={h['ops']} clean (dcn=2)"})
+        bench["hierarchical"] = {
+            "n_devices": rep["n_devices"], "seconds": rep["seconds"],
+            "hlo_records": h["records"], "hlo_ops": h["ops"],
+            "byte_deltas": h["byte_deltas"],
+        }
+
+    bench["total_seconds"] = sum(r["seconds"] for r in reports)
+    path = Path(__file__).resolve().parent.parent / "BENCH_9.json"
+    path.write_text(json.dumps(bench, indent=2))
+    rows.append({"name": "hlolint/bench_artifact", "us_per_call": 0.0,
+                 "derived": str(path)})
+    emit("hlolint", rows, ["name", "us_per_call", "derived"])
+    return rows
+
+
 def main() -> None:
     from .figures import ALL_FIGURES
 
@@ -738,6 +804,7 @@ def main() -> None:
     sections["zero"] = bench_zero
     sections["moe"] = bench_moe
     sections["lint"] = bench_lint
+    sections["hlolint"] = bench_hlolint
     failures = []
     for name, fn in sections.items():
         if filters and not any(f in name for f in filters):

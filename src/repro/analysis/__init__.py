@@ -1,18 +1,33 @@
 """Static analysis of compiled steps against the StepProgram IR (CommLint).
 
-`trace` extracts a structured CollectiveTrace from a jaxpr, `expect` compiles
-a StepProgram into the trace it should produce, and `lint` diffs the two into
-typed findings.  `python -m repro.launch.lint` runs the pass over every named
+Two levels, one rule engine:
+
+  * jaxpr level — `trace` extracts a structured CollectiveTrace from a
+    jaxpr, `expect` compiles a StepProgram into the trace it should
+    produce, and `lint` diffs the two into typed findings.
+  * compiled-HLO level (ScheduleLint) — `hlo_trace` parses the post-SPMD
+    module into an ordered HloTrace, and `schedule` cross-checks it against
+    the jaxpr trace and the program (collective rewrites, wire widening,
+    tier misrouting, lost overlap windows, trip-count drift) plus a static
+    exposed-comm estimate read straight off the scheduled op stream.
+
+`python -m repro.launch.lint [--hlo]` runs the pass over every named
 program; `launch.train --lint` gates a run on it.
 """
 from .expect import ExpectedTrace, expected_trace
+from .hlo_trace import (HLO_TO_KIND, KIND_FAMILY, HloCollectiveRecord,
+                        HloTrace, parse_hlo)
 from .lint import FINDING_CODES, Finding, lint_step, lint_trace
+from .schedule import (StaticOverlap, byte_deltas, crosscheck_trace,
+                       static_exposed_comm)
 from .trace import (COLLECTIVE_KINDS, CollectiveRecord, CollectiveTrace,
                     count_eqns, prims_of, scans_of, trace_jaxpr, trace_step)
 
 __all__ = [
     "COLLECTIVE_KINDS", "CollectiveRecord", "CollectiveTrace",
     "ExpectedTrace", "FINDING_CODES", "Finding",
-    "count_eqns", "expected_trace", "lint_step", "lint_trace",
-    "prims_of", "scans_of", "trace_jaxpr", "trace_step",
+    "HLO_TO_KIND", "HloCollectiveRecord", "HloTrace", "KIND_FAMILY",
+    "StaticOverlap", "byte_deltas", "count_eqns", "crosscheck_trace",
+    "expected_trace", "lint_step", "lint_trace", "parse_hlo", "prims_of",
+    "scans_of", "static_exposed_comm", "trace_jaxpr", "trace_step",
 ]

@@ -16,6 +16,22 @@ Finding codes (the full catalog — stable strings, asserted by tests):
   undonated-carrier                 error-feedback carrier not donated
   unbucketed-concat                 O(leaves) concatenates defeat the codec
   byte-budget-exceeded              per-step wire bytes above the plan budget
+
+Compiled-HLO codes (emitted by `analysis.schedule.crosscheck_trace`, which
+diffs the post-SPMD `HloTrace` against the jaxpr trace and the program —
+the layer where XLA's partitioner/scheduler can silently change the wire):
+
+  overlap-lost-in-compilation       async start/done pair with no compute
+                                    scheduled inside the window
+  collective-rewritten              jaxpr vs HLO wire bytes diverge beyond
+                                    the combining tolerance (per family)
+  wire-widened-post-spmd            a convert widens the payload right
+                                    before it rides the wire
+  dcn-misrouted                     replica groups span (or fail to span)
+                                    the pod stride against the program's tier
+                                    expectation
+  trip-count-mismatch               HLO while trips disagree with the jaxpr
+                                    scan multiplier (payloads agree)
 """
 from __future__ import annotations
 
@@ -34,6 +50,12 @@ FINDING_CODES = (
     "undonated-carrier",
     "unbucketed-concat",
     "byte-budget-exceeded",
+    # compiled-HLO level (analysis.schedule.crosscheck_trace)
+    "overlap-lost-in-compilation",
+    "collective-rewritten",
+    "wire-widened-post-spmd",
+    "dcn-misrouted",
+    "trip-count-mismatch",
 )
 
 _WIDE_DTYPES = ("float32", "float64")
@@ -43,7 +65,10 @@ _WIDE_DTYPES = ("float32", "float64")
 class Finding:
     code: str
     message: str
-    record: Optional[CollectiveRecord] = None  # None for whole-trace rules
+    # the anchoring record: a jaxpr CollectiveRecord, an
+    # hlo_trace.HloCollectiveRecord (compiled-HLO rules), or None for
+    # whole-trace rules
+    record: Optional[object] = None
 
     def __post_init__(self):
         if self.code not in FINDING_CODES:

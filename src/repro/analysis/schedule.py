@@ -1,0 +1,303 @@
+"""ScheduleLint: diff the compiled-HLO schedule against the jaxpr and the IR.
+
+PR 8's CommLint verifies a step at the jaxpr level — what the framework
+*intends*.  XLA's SPMD partitioner and latency-hiding scheduler sit between
+that intent and the wire: they combine collectives, rewrite a psum into a
+one-shot all-gather + local reduce, insert converts, decompose permutes,
+unroll scans, and (on accelerators) split collectives into async
+``-start``/``-done`` pairs whose window is the only place overlap can
+actually happen.  This module closes that gap:
+
+  * ``crosscheck_trace`` diffs an `HloTrace` (`analysis.hlo_trace`) against
+    the jaxpr `CollectiveTrace` and the program's `ExpectedTrace`, emitting
+    the five compiled-HLO finding codes (`analysis.lint.FINDING_CODES`);
+  * ``static_exposed_comm`` prices the scheduled op stream: wire time per
+    collective vs the roofline compute scheduled inside its async window —
+    a *static* overlap/exposed-comm estimate straight from the artifact,
+    reported by dryrun next to the calibrated ``exposed_comm_time``.
+
+Byte matching is per **family**, not per op: the partitioner may lower a
+``psum`` as all-reduce *or* as all-gather + reduce (and a ``reduce_scatter``
+as all-reduce + slice) without changing the input-side payload, so
+reduction-kind bytes are pooled ({psum, all_gather, reduce_scatter} vs
+{all-reduce, all-gather, reduce-scatter}) and only bytes that *leave* the
+family — or change magnitude — are a rewrite.  Records below the sideband
+threshold (`expect.WIDE_BYTES`) are control traffic and never byte-checked.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from .expect import ExpectedTrace
+from .hlo_trace import (DTYPE_BYTES, DTYPE_NP, KIND_FAMILY,
+                        HloCollectiveRecord, HloTrace, OP_RE)
+from .lint import Finding
+from .trace import CollectiveTrace
+
+#: jaxpr↔HLO byte agreement tolerance: ring/one-shot rewrites preserve the
+#: input-side payload exactly; 5% absorbs padding and combined sidebands
+BYTE_TOL = 0.05
+
+_NP_BYTES = {np_name: DTYPE_BYTES[hlo] for hlo, np_name in DTYPE_NP.items()}
+
+
+def _np_bytes(dtype: str) -> int:
+    return _NP_BYTES.get(str(dtype), 4)
+
+
+def _family_sums(records, wide_bytes: int, weighted: bool):
+    """Per-family byte sums over non-sideband records.  `records` yields
+    (family, payload_bytes, trips)."""
+    out: Dict[str, float] = {}
+    for fam, payload, trips in records:
+        if payload < wide_bytes:
+            continue
+        out[fam] = out.get(fam, 0.0) + payload * (trips if weighted else 1.0)
+    return out
+
+
+def _jaxpr_rows(jtrace: CollectiveTrace):
+    for r in jtrace.records:
+        yield KIND_FAMILY.get(r.kind, r.kind), float(r.payload_bytes), \
+            float(getattr(r, "scan_trips", 1) or 1)
+
+
+def _hlo_rows(htrace: HloTrace):
+    for r in htrace.records:
+        yield KIND_FAMILY.get(r.kind, r.kind), float(r.payload_bytes), \
+            float(r.trips)
+
+
+def byte_deltas(jtrace: CollectiveTrace, htrace: HloTrace,
+                wide_bytes: int = 256) -> Dict[str, Dict[str, float]]:
+    """Per-family trip-weighted wire-byte comparison (the benchmark metric):
+    {family: {jaxpr, hlo, rel_delta}} over non-sideband records."""
+    jw = _family_sums(_jaxpr_rows(jtrace), wide_bytes, weighted=True)
+    hw_ = _family_sums(_hlo_rows(htrace), wide_bytes, weighted=True)
+    out = {}
+    for fam in sorted(set(jw) | set(hw_)):
+        a, b = jw.get(fam, 0.0), hw_.get(fam, 0.0)
+        denom = max(a, b)
+        out[fam] = {"jaxpr": a, "hlo": b,
+                    "rel_delta": (abs(a - b) / denom) if denom else 0.0}
+    return out
+
+
+def _window_cost(coster, lines: List[str], lo: int, hi: int) -> Tuple[float, float]:
+    """(flops, hbm_bytes) of the compute scheduled strictly between two line
+    indices of one computation — collective lines themselves excluded."""
+    flops = bytes_ = 0.0
+    for ln in lines[lo + 1:hi]:
+        if OP_RE.search(ln):
+            continue
+        flops += coster.dot_flops(ln)
+        priced = coster.hbm_bytes(ln)
+        if priced is not None:
+            bytes_ += priced[1]
+    return flops, bytes_
+
+
+def crosscheck_trace(jtrace: CollectiveTrace, htrace: HloTrace,
+                     exp: ExpectedTrace, *,
+                     tol: float = BYTE_TOL) -> List[Finding]:
+    """All compiled-HLO findings of `htrace` against the jaxpr trace and the
+    program expectation.  Empty list = compilation preserved the schedule."""
+    out: List[Finding] = []
+    prog = exp.program.name
+    wide = exp.wide_bytes
+    big = [r for r in htrace.records
+           if not r.scalar and r.payload_bytes >= wide]
+
+    # --- collective-rewritten / trip-count-mismatch: family byte agreement.
+    # Skipped on 1-device meshes: XLA elides single-replica collectives
+    # entirely, so there is nothing on the HLO side to match.
+    if exp.n_devices > 1:
+        jw = _family_sums(_jaxpr_rows(jtrace), wide, weighted=True)
+        hw_ = _family_sums(_hlo_rows(htrace), wide, weighted=True)
+        jp = _family_sums(_jaxpr_rows(jtrace), wide, weighted=False)
+        hp = _family_sums(_hlo_rows(htrace), wide, weighted=False)
+        for fam in sorted(set(jw) | set(hw_)):
+            a, b = jw.get(fam, 0.0), hw_.get(fam, 0.0)
+            denom = max(a, b)
+            if denom == 0.0 or abs(a - b) / denom <= tol:
+                continue
+            anchor = next((r for r in big
+                           if KIND_FAMILY.get(r.kind, r.kind) == fam), None)
+            pa, pb = jp.get(fam, 0.0), hp.get(fam, 0.0)
+            pden = max(pa, pb)
+            if pden > 0.0 and abs(pa - pb) / pden <= tol:
+                # per-issue payloads agree — only the execution multiplier
+                # moved (a while loop unrolled differently than the jaxpr
+                # scan, or a trip count was misparsed)
+                out.append(Finding(
+                    "trip-count-mismatch",
+                    f"{fam} family of program {prog!r}: per-issue payloads "
+                    f"agree ({pa:.0f} B jaxpr vs {pb:.0f} B HLO) but "
+                    f"trip-weighted wire bytes diverge "
+                    f"({a:.0f} B vs {b:.0f} B): HLO while trips != jaxpr "
+                    "scan multiplier", anchor))
+            else:
+                out.append(Finding(
+                    "collective-rewritten",
+                    f"{fam} family of program {prog!r}: jaxpr wire bytes "
+                    f"{a:.0f} B vs compiled HLO {b:.0f} B "
+                    f"({abs(a - b) / denom:.0%} apart, tolerance {tol:.0%}): "
+                    "the SPMD partitioner changed what rides the wire",
+                    anchor))
+
+    # --- wire-widened-post-spmd: a convert feeding a collective at a wider
+    # dtype than it converts from means the payload was widened right before
+    # the wire (dequantize-then-communicate).  The hierarchical inter-tier
+    # fp32 leg is planned (fp32_exempt_axes), so DCN records are exempt when
+    # the program declares one.
+    for r in big:
+        if r.fed_by_convert is None:
+            continue
+        if _np_bytes(r.fed_by_convert) >= _np_bytes(r.dtype):
+            continue  # narrowing (quantize) or same width: healthy
+        if r.is_dcn and exp.fp32_exempt_axes:
+            continue
+        out.append(Finding(
+            "wire-widened-post-spmd",
+            f"{r.op} payload ({r.payload_bytes} B {r.dtype}) is fed by a "
+            f"convert from {r.fed_by_convert} in program {prog!r}: the "
+            "wire format was widened after SPMD partitioning", r))
+
+    # --- dcn-misrouted: tier routing vs the pod stride.  Only meaningful
+    # when the caller classified groups against a pod stride.
+    if htrace.pod_stride > 0 and big:
+        expect_dcn = bool(exp.fp32_exempt_axes)
+        spanning = [r for r in big if r.is_dcn]
+        if expect_dcn and not spanning:
+            out.append(Finding(
+                "dcn-misrouted",
+                f"program {prog!r} plans a hierarchical schedule (inter-tier "
+                f"axes {list(exp.fp32_exempt_axes)}) but no compiled "
+                f"collective spans the pod stride {htrace.pod_stride}: the "
+                "two-tier plan was flattened into single-tier groups",
+                big[0]))
+        elif expect_dcn and len(spanning) == len(big):
+            out.append(Finding(
+                "dcn-misrouted",
+                f"every compiled collective of program {prog!r} spans the "
+                f"pod stride {htrace.pod_stride}: the intra-tier leg of the "
+                "hierarchical schedule is missing (all traffic rides DCN)",
+                spanning[0]))
+        elif not expect_dcn:
+            for r in spanning:
+                out.append(Finding(
+                    "dcn-misrouted",
+                    f"{r.op} replica group spans the pod stride "
+                    f"{htrace.pod_stride} (span {r.span}) but program "
+                    f"{prog!r} plans a single-tier schedule: this leg rides "
+                    "DCN unplanned", r))
+
+    # --- overlap-lost-in-compilation: an async start/done pair with no
+    # compute scheduled inside the window hides nothing — the latency-hiding
+    # scheduler serialized what the program overlapped.  Sync collectives
+    # (CPU lowering) have no window and can't trip this; the rule reads the
+    # actual compiled schedule, not the program's intent.
+    coster = htrace.coster()
+    for r in htrace.records:
+        if not r.is_async or r.scalar or r.payload_bytes < wide:
+            continue
+        lines = htrace.comps.get(r.computation, [])
+        flops, bytes_ = _window_cost(coster, lines, r.start_index,
+                                     r.done_index)
+        if flops <= 0.0 and bytes_ <= 0.0:
+            out.append(Finding(
+                "overlap-lost-in-compilation",
+                f"async {r.op} ({r.payload_bytes} B) in program {prog!r} "
+                "has no compute scheduled between its start and done: the "
+                "overlap window is empty, the collective is fully exposed",
+                r))
+    return out
+
+
+# ------------------------------------------------- static overlap estimate
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticOverlap:
+    """Overlap/exposed-comm accounting read straight off the compiled
+    schedule (wire time per collective vs roofline compute inside its async
+    window) — the artifact-side counterpart of `costmodel.OverlapEstimate`."""
+    comm_s: float        # total collective wire time in the scheduled stream
+    overlapped_s: float  # comm hidden behind compute inside async windows
+    exposed_s: float     # comm_s - overlapped_s
+    compute_s: float     # roofline compute time of the whole module
+    n_async: int         # collectives compiled as start/done pairs
+    n_sync: int          # collectives compiled synchronous (no window)
+
+    @property
+    def hidden_fraction(self) -> float:
+        return 0.0 if self.comm_s <= 0.0 else self.overlapped_s / self.comm_s
+
+    def row(self) -> Dict[str, float]:
+        return {"comm_s": self.comm_s, "overlapped_s": self.overlapped_s,
+                "exposed_s": self.exposed_s, "compute_s": self.compute_s,
+                "n_async": self.n_async, "n_sync": self.n_sync,
+                "hidden_fraction": self.hidden_fraction}
+
+
+def _roofline_seconds(flops: float, bytes_: float) -> float:
+    from ..core import hw
+    return max(flops / hw.PEAK_FLOPS_BF16, bytes_ / hw.HBM_BW)
+
+
+def static_exposed_comm(htrace: HloTrace, *,
+                        include_scalar: bool = False,
+                        wide_bytes: int = 0) -> StaticOverlap:
+    """Price the compiled op stream: per-collective wire time
+    (`costmodel.wire_seconds` over the algorithm wire bytes, ICI vs DCN by
+    pod span) against the roofline compute scheduled inside its async
+    window.  A synchronous collective has no window — all of its wire time
+    is exposed, which is exactly what the CPU lowering's fully-serial
+    schedule should report."""
+    from ..core.costmodel import wire_seconds
+
+    coster = htrace.coster()
+    comm = overlapped = 0.0
+    n_async = n_sync = 0
+    for r in htrace.records:
+        if (r.scalar and not include_scalar) or r.payload_bytes < wide_bytes:
+            continue
+        wire = r.algo_wire_bytes * r.trips
+        t_comm = wire_seconds(0.0, wire) if r.is_dcn else wire_seconds(wire)
+        comm += t_comm
+        if r.is_async:
+            n_async += 1
+            lines = htrace.comps.get(r.computation, [])
+            flops, bytes_ = _window_cost(coster, lines, r.start_index,
+                                         r.done_index)
+            t_window = _roofline_seconds(flops, bytes_) * r.trips
+            overlapped += min(t_comm, t_window)
+        else:
+            n_sync += 1
+    # whole-module roofline compute (collective lines excluded; fused
+    # computations' bytes counted once, at the fusion call site — the same
+    # convention as `launch.hlo_analysis.analyze_cost`), for scale
+    flops = bytes_ = 0.0
+    entry_lines = htrace.comps.get("__entry__")
+    from .hlo_trace import FUSED_PREFIXES, comp_multiplier, multipliers
+    mult = multipliers(htrace.comps) if htrace.comps else {}
+    for name, lines in htrace.comps.items():
+        if name == "__entry__":
+            continue
+        m = comp_multiplier(name, lines, mult, entry_lines)
+        fusion_like = name.startswith(FUSED_PREFIXES) or \
+            ".clone" in name and "region" not in name
+        for ln in lines:
+            if OP_RE.search(ln):
+                continue
+            flops += coster.dot_flops(ln) * m
+            if fusion_like:
+                continue
+            priced = coster.hbm_bytes(ln)
+            if priced is not None:
+                bytes_ += priced[1] * m
+    return StaticOverlap(
+        comm_s=comm, overlapped_s=overlapped, exposed_s=comm - overlapped,
+        compute_s=_roofline_seconds(flops, bytes_),
+        n_async=n_async, n_sync=n_sync)

@@ -336,6 +336,23 @@ def pipeline_params_at_scale(model: CommModel, n_endpoints: int,
     )
 
 
+def wire_seconds(ici_bytes: float, dcn_bytes: float = 0.0,
+                 bw_ici: Optional[float] = None,
+                 bw_dcn: Optional[float] = None) -> float:
+    """Seconds to move per-device wire bytes at the flat roofline bandwidths.
+
+    The pricing hook the static HLO scheduler (`analysis.schedule`) uses:
+    ICI traffic at the full link budget (`hw.ICI_LINK_BW * hw.ICI_LINKS`),
+    DCN traffic at the per-chip NIC share (`hw.DCN_BW_PER_CHIP`).  This is
+    deliberately alpha-free — the static estimate prices the *schedule
+    shape* (what the compiled stream can hide), not a latency-accurate
+    step time; `exposed_comm_time` remains the calibrated predictor.
+    """
+    bw_ici = bw_ici or (hw.ICI_LINK_BW * hw.ICI_LINKS)
+    bw_dcn = bw_dcn or hw.DCN_BW_PER_CHIP
+    return ici_bytes / bw_ici + dcn_bytes / bw_dcn
+
+
 def exposed_comm_time(compute_time: float, plan, sizes,
                       n_endpoints: Optional[int] = None,
                       model: Optional[CommModel] = None,

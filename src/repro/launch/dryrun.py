@@ -76,25 +76,37 @@ def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
 _LINT_CACHE: dict = {}
 
 
-def _lint_report(program) -> dict:
+def _lint_report(program, hlo: bool = False) -> dict:
     """CommLint verdict for one StepProgram on an 8-device CPU submesh —
     reported next to the roofline so a priced program that would compile to
-    off-plan collectives is visible in the same artifact.  Cached per program
-    name: every cell prices the same plan/zero programs."""
+    off-plan collectives is visible in the same artifact.  With `hlo=True`
+    the compiled-HLO level rides along: the jaxpr↔HLO cross-check findings
+    plus the static overlap accounting of the compiled schedule (note: of
+    the 8-device lint fixture — the schedule *shape*, not a production-mesh
+    time).  Cached per (program name, level): every cell prices the same
+    plan/zero programs."""
     if program is None:
         return None
-    if program.name not in _LINT_CACHE:
+    key = (program.name, hlo)
+    if key not in _LINT_CACHE:
         from .lint import lint_program_on_mesh
         try:
-            rep = lint_program_on_mesh(program, n_devices=8)
-            _LINT_CACHE[program.name] = dict(
+            rep = lint_program_on_mesh(program, n_devices=8, hlo=hlo)
+            out = dict(
                 program=rep["program"], n_devices=rep["n_devices"],
                 records=rep["records"], findings=rep["findings"],
                 seconds=round(rep["seconds"], 3))
+            if hlo:
+                h = rep["hlo"]
+                out["hlo"] = dict(
+                    records=h["records"], n_async=h["n_async"],
+                    byte_deltas=h["byte_deltas"],
+                    static_overlap=h["static_overlap"])
+            _LINT_CACHE[key] = out
         except Exception as e:  # noqa: BLE001 — lint must not sink the sweep
-            _LINT_CACHE[program.name] = dict(program=program.name,
-                                             error=f"{type(e).__name__}: {e}")
-    return _LINT_CACHE[program.name]
+            _LINT_CACHE[key] = dict(program=program.name,
+                                    error=f"{type(e).__name__}: {e}")
+    return _LINT_CACHE[key]
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
@@ -208,6 +220,16 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                 dp_wire_ratio_zero=zwb["ratio"],
             )
             plan_prog = plan.step_program()
+            lint_plan = _lint_report(plan_prog, hlo=True)
+            lint_zero = _lint_report(prg.train_step_program(zero=True),
+                                     hlo=True)
+
+            def _static_exposed(rep):
+                """HLO-derived static exposed-comm seconds of the compiled
+                lint fixture, or None when the level errored out."""
+                return ((rep or {}).get("hlo", {})
+                        .get("static_overlap", {}).get("exposed_s"))
+
             overlap_terms = dict(
                 exposed_comm_s=est.exposed_s,
                 hidden_comm_fraction=est.hidden_fraction,
@@ -221,10 +243,11 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                 dp_wire_bytes_planned=bytes_on_wire(
                     grad_bytes, wspec.inter if multi_pod else wspec.intra,
                     n_buckets),
-                lint=dict(
-                    plan=_lint_report(plan_prog),
-                    zero=_lint_report(prg.train_step_program(zero=True)),
-                ),
+                # the compiled schedule's own exposure accounting (the
+                # artifact-level counterpart of exposed_comm_s above)
+                exposed_comm_hlo_static_s=_static_exposed(lint_plan),
+                exposed_comm_zero_hlo_static_s=_static_exposed(lint_zero),
+                lint=dict(plan=lint_plan, zero=lint_zero),
                 **overlap_terms_zero,
             )
         cell.update(

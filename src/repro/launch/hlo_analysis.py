@@ -1,7 +1,8 @@
 """Post-SPMD HLO analysis: collective byte accounting for the roofline.
 
-cost_analysis() has no collective term, so we parse the compiled HLO text and sum
-wire bytes per collective op (per device), with the standard algorithm factors:
+cost_analysis() has no collective term, so we parse the compiled HLO text and
+sum wire bytes per collective op (per device), with the standard algorithm
+factors:
 
   all-reduce          2 * size * (g-1)/g        (ring RS+AG)
   all-gather          size * (g-1)/g            (size = gathered result)
@@ -13,162 +14,50 @@ wire bytes per collective op (per device), with the standard algorithm factors:
 (device-id span >= pod stride) are classified as DCN traffic and costed at DCN
 bandwidth in the roofline; everything else is ICI.
 
-Collectives inside `while` bodies (layer scans!) execute trip-count times: we
-parse the computation graph, recover trip counts from the loop conditions'
-`compare(iv, constant)` patterns, and weight each computation by its execution
-multiplier (nested scans multiply).
+Collectives inside `while` bodies (layer scans!) execute trip-count times,
+recovered from the loop conditions' `compare(iv, constant)` patterns; nested
+scans multiply.
+
+The parsing machinery itself (dtype table, shape/replica-group regexes,
+computation splitting, trip recovery, the per-line cost rules) lives in
+`analysis.hlo_trace` — this module is a thin consumer that aggregates its
+structured records into the roofline's totals.  The private names below are
+kept as aliases for back-compat with existing callers/tests.
 """
 from __future__ import annotations
 
 import dataclasses
-import re
 from collections import defaultdict
 from typing import Dict, List, Optional, Tuple
 
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
-    "f8e4m3fn": 1, "f8e5m2": 1,
-}
+from ..analysis import hlo_trace as _ht
+from ..analysis.hlo_trace import (  # noqa: F401  (re-exported aliases)
+    DTYPE_BYTES as _DTYPE_BYTES,
+    FUSED_PREFIXES as _FUSED_PREFIXES,
+    LineCoster,
+    build_type_map as _build_type_map,
+    collect_trip_counts as _collect_trip_counts,
+    dims_of as _dims_of,
+    multipliers as _multipliers,
+    parse_group as _parse_group,
+    parse_hlo,
+    shape_bytes as _shape_bytes,
+    split_computations as _split_computations,
+    trip_count as _trip_count,
+)
 
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-_OP_RE = re.compile(
-    r"=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\][^ ]*))\s+"
-    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
-    r"(-start)?\(")
-_GROUPS_RE = re.compile(r"replica_groups=(\{\{[^=]*?\}\}|\[[^\]]*\]<=\[[^\]]*\](?:T\([\d,]+\))?)")
-_SOURCE_TARGET_RE = re.compile(r"source_target_pairs=\{([^}]*)\}")
-_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s+\(")
-_WHILE_RE = re.compile(r"while\(.*?\).*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)")
-_CALL_RE = re.compile(r"\b(?:call|fusion)\(.*?\).*?(?:to_apply|calls)=%?([\w.\-]+)")
-_COND_RE = re.compile(r"conditional\(")
-_CONST_RE = re.compile(r"%?([\w.\-]+)\s*=\s*\w+\[\]\s*constant\((\d+)\)")
-_COMPARE_RE = re.compile(r"compare\(%?([\w.\-]+),\s*%?([\w.\-]+)\),?.*direction=(LT|LE|GT|GE)")
-
-
-def _shape_bytes(type_str: str) -> int:
-    total = 0
-    for dtype, dims in _SHAPE_RE.findall(type_str):
-        if dtype not in _DTYPE_BYTES:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dtype]
-    return total
-
-
-def _parse_group(line: str) -> Tuple[int, int]:
-    """Returns (group_size, id_span_within_first_group)."""
-    m = _GROUPS_RE.search(line)
-    if not m:
-        st = _SOURCE_TARGET_RE.search(line)
-        if st:
-            ids = [int(x) for x in re.findall(r"\d+", st.group(1))]
-            span = max(abs(a - b) for a, b in zip(ids[::2], ids[1::2])) if ids else 0
-            return 2, span
-        return 1, 0
-    g = m.group(1)
-    if g.startswith("{{"):
-        first = g[2:].split("}")[0]
-        ids = [int(x) for x in first.split(",") if x.strip()]
-        return max(len(ids), 1), (max(ids) - min(ids)) if ids else 0
-    # iota form: [G,S]<=[N...] with optional T(perm); malformed or truncated
-    # group annotations (hand-written / trivial HLO) degrade to "no groups"
-    # instead of raising out of the whole analysis
-    import numpy as np
-    try:
-        left = [int(x) for x in re.findall(r"\d+", g.split("<=")[0])]
-        right_part = g.split("<=")[1]
-        reshape = [int(x) for x in re.findall(r"\d+", right_part.split("T")[0].strip("[] "))]
-        tperm = re.search(r"T\(([\d,]+)\)", right_part)
-        ngroups, gsize = (left + [1, 1])[:2] if len(left) >= 2 else (1, left[0] if left else 1)
-        n = int(np.prod(reshape)) if reshape else ngroups * gsize
-        ids = np.arange(n).reshape(reshape if reshape else (n,))
-        if tperm:
-            ids = ids.transpose([int(x) for x in tperm.group(1).split(",")])
-        ids = ids.reshape(ngroups, gsize)
-        span = int(ids[0].max() - ids[0].min()) if ids.size else 0
-        return gsize, span
-    except (IndexError, ValueError):
-        return 1, 0
-
-
-def _split_computations(hlo_text: str) -> Dict[str, List[str]]:
-    """Computation headers may wrap across lines; a computation starts at a
-    non-indented `%name (`/`ENTRY %name (` line and ends at a bare `}`."""
-    comps: Dict[str, List[str]] = {}
-    cur: Optional[str] = None
-    entry_name = None
-    for raw in hlo_text.splitlines():
-        line = raw.strip()
-        if not raw.startswith((" ", "\t")):
-            m = _COMP_START_RE.match(line)
-            if m:
-                cur = m.group(1)
-                comps[cur] = []
-                if line.startswith("ENTRY") or raw.startswith("ENTRY"):
-                    entry_name = cur
-                continue
-        if line == "}":
-            continue
-        if cur is not None:
-            comps[cur].append(line)
-    if entry_name is not None:
-        comps["__entry__"] = comps[entry_name]
-    return comps
-
-
-def _trip_count(cond_lines: List[str]) -> int:
-    consts = {}
-    for ln in cond_lines:
-        for name, val in _CONST_RE.findall(ln):
-            consts[name] = int(val)
-    for ln in cond_lines:
-        m = _COMPARE_RE.search(ln)
-        if m:
-            a, b, d = m.groups()
-            if b in consts:
-                return consts[b] + (1 if d in ("LE",) else 0)
-            if a in consts:
-                return consts[a] + (1 if d in ("GE",) else 0)
-    # XLA usually fuses the compare (`ROOT %wrapped_compare = pred[] fusion(%gte,
-    # %constant.N), ...`): the bound constant still lives in the cond computation.
-    if consts:
-        return max(consts.values())
-    return 1
-
-
-def _multipliers(comps: Dict[str, List[str]]) -> Dict[str, float]:
-    """Execution multiplier per computation (entry=1; while bodies x trip count)."""
-    children: Dict[str, List[Tuple[str, float]]] = defaultdict(list)
-    for name, lines in comps.items():
-        for ln in lines:
-            w = _WHILE_RE.search(ln)
-            if w:
-                cond, body = w.groups()
-                trips = _trip_count(comps.get(cond, []))
-                children[name].append((body, float(max(trips, 1))))
-                children[name].append((cond, float(max(trips, 1))))
-                continue
-            c = _CALL_RE.search(ln)
-            if c:
-                children[name].append((c.group(1), 1.0))
-    mult: Dict[str, float] = defaultdict(float)
-
-    def visit(name: str, m: float, depth=0):
-        if depth > 64:
-            return
-        mult[name] += m
-        for k, w in children.get(name, []):
-            if k in comps:
-                visit(k, m * w, depth + 1)
-
-    # "__entry__" aliases the real entry computation's lines, so its children are
-    # the real entry's children; the real entry itself is fixed to x1 in analyze.
-    visit("__entry__", 1.0)
-    return dict(mult)
+_SHAPE_RE = _ht.SHAPE_RE
+_OP_RE = _ht.OP_RE
+_GROUPS_RE = _ht.GROUPS_RE
+_SOURCE_TARGET_RE = _ht.SOURCE_TARGET_RE
+_COMP_START_RE = _ht.COMP_START_RE
+_WHILE_RE = _ht.WHILE_RE
+_CALL_RE = _ht.CALL_RE
+_CONST_RE = _ht.CONST_RE
+_COMPARE_RE = _ht.COMPARE_RE
+_DEF_RE = _ht.DEF_RE
+_PARAM_ANNOT_RE = _ht.PARAM_ANNOT_RE
+_DOT_RE = _ht.DOT_RE
 
 
 @dataclasses.dataclass
@@ -185,47 +74,18 @@ class CollectiveStats:
 def analyze_collectives(hlo_text: str, pod_stride: int = 0) -> CollectiveStats:
     """pod_stride: device-id stride of the pod axis (data*model = 256 for the
     (2,16,16) mesh); 0 = single pod (everything ICI)."""
-    if not hlo_text or not hlo_text.strip():
-        return CollectiveStats()
-    comps = _split_computations(hlo_text)
-    if not comps:
-        return CollectiveStats()
-    mult = _multipliers(comps)
-    # map the alias back: ops under the entry computation get multiplier of entry
+    trace = parse_hlo(hlo_text, pod_stride=pod_stride)
     stats = CollectiveStats()
     agg = defaultdict(lambda: {"count": 0.0, "wire_bytes": 0.0})
-    for name, lines in comps.items():
-        if name == "__entry__":
-            continue
-        m_exec = mult.get(name, 0.0)
-        if m_exec == 0.0:
-            m_exec = mult.get("__entry__", 1.0) if lines is comps.get("__entry__") else 1.0
-        for line in lines:
-            om = _OP_RE.search(line)
-            if not om:
-                continue
-            type_str, op, start = om.group(1), om.group(2), om.group(3)
-            size = _shape_bytes(type_str)
-            g, span = _parse_group(line)
-            if op == "all-reduce":
-                wire = 2.0 * size * (g - 1) / max(g, 1)
-            elif op == "all-gather":
-                wire = size * (g - 1) / max(g, 1)
-            elif op == "reduce-scatter":
-                wire = size * (g - 1)
-            elif op == "all-to-all":
-                wire = size * (g - 1) / max(g, 1)
-            else:
-                wire = size
-            wire *= m_exec
-            is_dcn = pod_stride > 0 and span >= pod_stride
-            key = f"{op}{'/dcn' if is_dcn else ''}"
-            agg[key]["count"] += m_exec
-            agg[key]["wire_bytes"] += wire
-            if is_dcn:
-                stats.dcn_bytes += wire
-            else:
-                stats.ici_bytes += wire
+    for rec in trace.records:
+        wire = rec.algo_wire_bytes * rec.trips
+        key = f"{rec.op}{'/dcn' if rec.is_dcn else ''}"
+        agg[key]["count"] += rec.trips
+        agg[key]["wire_bytes"] += wire
+        if rec.is_dcn:
+            stats.dcn_bytes += wire
+        else:
+            stats.ici_bytes += wire
     stats.by_op = {k: dict(v) for k, v in agg.items()}
     return stats
 
@@ -234,42 +94,14 @@ def analyze_collectives(hlo_text: str, pod_stride: int = 0) -> CollectiveStats:
 # XLA's HloCostAnalysis (and thus compiled.cost_analysis()) counts a while body
 # ONCE, so scanned layer stacks under-report flops/bytes by a factor of L
 # (verified empirically: scan ratio 1.0 vs unrolled 10.0 for a 10-layer stack).
-# We therefore re-derive both from the HLO with the execution multipliers above:
+# We therefore re-derive both from the HLO with the execution multipliers, via
+# the per-line rules in `analysis.hlo_trace.LineCoster`:
 #   flops  = sum over `dot` ops of 2 * result_elems * prod(contracting dims)
 #            (matmul flops only — the standard MFU accounting convention)
 #   bytes  = sum over scheduled op lines of (result + operand) bytes
 #            (post-fusion HLO: one line ~ one kernel ~ operands read + result
 #            written to HBM; fusion-internal computations are skipped, their
 #            traffic is counted at the fusion call site)
-
-_DEF_RE = re.compile(r"%([\w.\-]+)\s*=\s*((?:\([^)]*\))|\w+\[[\d,]*\](?:\{[^}]*\})?)")
-_PARAM_ANNOT_RE = re.compile(r"([\w.\-]+):\s*((?:\([^)]*\))|\w+\[[\d,]*\](?:\{[^}]*\})?)")
-# operands may carry an inline type (`dot(f32[8,8]{1,0} %a, ...)`) depending on
-# the XLA version's dump style
-_DOT_RE = re.compile(
-    r"=\s*(\w+\[[\d,]*\])[^ ]*\s+dot\("
-    r"(?:\w+\[[\d,]*\](?:\{[^}]*\})?\s+)?%([\w.\-]+),\s*"
-    r"(?:\w+\[[\d,]*\](?:\{[^}]*\})?\s+)?%([\w.\-]+)\)"
-    r".*?lhs_contracting_dims=\{([\d,]*)\}")
-_FUSED_PREFIXES = ("fused_computation", "wrapped_", "add.", "add_", "max.", "min.",
-                   "region_", "and.", "or.")
-
-
-def _dims_of(type_str: str):
-    m = _SHAPE_RE.search(type_str)
-    if not m:
-        return None, []
-    dtype, dims = m.group(1), m.group(2)
-    return dtype, [int(d) for d in dims.split(",")] if dims else []
-
-
-def _build_type_map(hlo_text: str) -> Dict[str, str]:
-    types: Dict[str, str] = {}
-    for m in _PARAM_ANNOT_RE.finditer(hlo_text):
-        types.setdefault(m.group(1), m.group(2))
-    for m in _DEF_RE.finditer(hlo_text):
-        types[m.group(1)] = m.group(2)
-    return types
 
 
 @dataclasses.dataclass
@@ -289,16 +121,6 @@ class ModuleCost:
                 del self.top_lines[40:]
 
 
-def _collect_trip_counts(comps) -> set:
-    trips = set()
-    for lines in comps.values():
-        for ln in lines:
-            w = _WHILE_RE.search(ln)
-            if w:
-                trips.add(_trip_count(comps.get(w.group(1), [])))
-    return {t for t in trips if t > 1}
-
-
 def analyze_cost(hlo_text: str) -> ModuleCost:
     if not hlo_text or not hlo_text.strip():
         return ModuleCost()
@@ -306,21 +128,8 @@ def analyze_cost(hlo_text: str) -> ModuleCost:
     if not comps:
         return ModuleCost()
     mult = _multipliers(comps)
-    types = _build_type_map(hlo_text)
-    trips = _collect_trip_counts(comps)
+    coster = LineCoster(_build_type_map(hlo_text), _collect_trip_counts(comps))
     cost = ModuleCost()
-
-    def _operand_bytes(name: str) -> float:
-        """Bytes actually read from one operand.  Stacked loop carries — arrays
-        whose leading dim equals a loop trip count, e.g. the (88, D, F) parameter
-        stacks sliced inside fused dynamic-slice/update — are touched one slice
-        per iteration, not in full."""
-        t = types.get(name, "")
-        b = _shape_bytes(t)
-        _, dims = _dims_of(t)
-        if len(dims) >= 2 and dims[0] in trips:
-            return b / dims[0]
-        return b
     entry_lines = comps.get("__entry__")
     for name, lines in comps.items():
         if name == "__entry__":
@@ -330,65 +139,16 @@ def analyze_cost(hlo_text: str) -> ModuleCost:
             m_exec = 1.0 if lines is entry_lines else 0.0
         if m_exec == 0.0:
             continue
-        fusion_like = name.startswith(_FUSED_PREFIXES) or ".clone" in name and "region" not in name
+        fusion_like = name.startswith(_FUSED_PREFIXES) or \
+            ".clone" in name and "region" not in name
         for line in lines:
-            dm = _DOT_RE.search(line)
-            if dm:
-                res_t, lhs, _, cdims = dm.group(1), dm.group(2), dm.group(3), dm.group(4)
-                _, res_dims = _dims_of(res_t)
-                res_elems = 1
-                for d in res_dims:
-                    res_elems *= d
-                lhs_t = types.get(lhs, "")
-                _, lhs_dims = _dims_of(lhs_t)
-                contract = 1
-                for ci in ([int(x) for x in cdims.split(",")] if cdims else []):
-                    if ci < len(lhs_dims):
-                        contract *= lhs_dims[ci]
-                cost.flops += 2.0 * res_elems * contract * m_exec
+            cost.flops += coster.dot_flops(line) * m_exec
             if fusion_like:
                 continue  # bytes counted at the call site
-            clean = line[5:] if line.startswith("ROOT ") else line
-            dfm = _DEF_RE.match(clean)
-            if not dfm:
-                continue
-            res_bytes = _shape_bytes(dfm.group(2))
-            op_part = clean[dfm.end():].lstrip()
-            opm = re.match(r"([\w\-]+)\(", op_part)
-            op_kind = opm.group(1) if opm else ""
-            paren = op_part.find("(")
-            close = op_part.find(")", paren)
-            operands = []
-            if paren >= 0 and close > paren:
-                operands = re.findall(r"%([\w.\-]+)", op_part[paren:close + 1])
-            # Data-movement rules: slicing ops touch only the slice, not the full
-            # operand (critical inside layer scans: dynamic-slice reads of the
-            # stacked (L, ...) parameter arrays would otherwise count L times L-full).
-            if op_kind in ("tuple", "get-tuple-element", "bitcast", "parameter",
-                           "constant", "iota", "after-all", "partition-id",
-                           "replica-id", "reshape",
-                           # control flow: carries alias in place; the bodies'
-                           # real traffic is counted via their own multipliers
-                           "while", "conditional", "call", "custom-call"):
-                continue
-            if op_kind in ("dynamic-slice", "gather", "slice"):
-                cost._add(op_kind, 2.0 * res_bytes * m_exec, line)
-                continue
-            if op_kind in ("dynamic-update-slice", "scatter"):
-                upd_idx = 1 if op_kind == "dynamic-update-slice" else 2
-                upd = _shape_bytes(types.get(operands[upd_idx], "")) if len(operands) > upd_idx else res_bytes
-                cost._add(op_kind, 3.0 * min(upd, res_bytes) * m_exec, line)
-                continue
-            if op_kind in ("copy", "convert", "transpose", "broadcast"):
-                cost._add(op_kind, 2.0 * res_bytes * m_exec, line)
-                continue
-            # results that are themselves stacked carries (fused DUS into an
-            # (L, ...) accumulator) also only write one slice per iteration
-            _, res_dims = _dims_of(dfm.group(2))
-            if len(res_dims) >= 2 and res_dims and res_dims[0] in trips:
-                res_bytes = res_bytes / res_dims[0]
-            operand_bytes = sum(_operand_bytes(on) for on in operands)
-            cost._add(op_kind, (res_bytes + operand_bytes) * m_exec, line)
+            priced = coster.hbm_bytes(line)
+            if priced is not None:
+                op_kind, b = priced
+                cost._add(op_kind, b * m_exec, line)
     return cost
 
 

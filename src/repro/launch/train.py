@@ -228,16 +228,20 @@ def main(argv=None):
         from .lint import lint_program_on_mesh
         n_data = mesh.shape.get("data", 1) if mesh is not None else 1
         n_pod = mesh.shape.get("pod", 1) if mesh is not None else 1
+        # both levels: jaxpr rules plus the compiled-HLO cross-check — the
+        # gate covers what the SPMD partitioner did, not just the intent
         rep = lint_program_on_mesh(program, n_devices=n_pod * n_data,
-                                   policy=policy, dcn=n_pod)
+                                   policy=policy, dcn=n_pod, hlo=True)
         if rep["findings"]:
             for f in rep["findings"]:
                 print(f"lint: {f}", file=sys.stderr)
             raise SystemExit(
                 f"lint: {len(rep['findings'])} finding(s) on program "
                 f"{program.name!r} — refusing to start the run")
+        h = rep["hlo"]
         print(f"lint: program {program.name} clean "
-              f"({rep['records']} collectives, {rep['seconds']:.2f}s)")
+              f"({rep['records']} collectives, {h['records']} compiled, "
+              f"{h['n_async']} async, {rep['seconds']:.2f}s)")
 
     trainer = Trainer(
         cfg, shape,

@@ -239,6 +239,17 @@ def build_moe_ep_step(cfg: ModelConfig, opt: adamw.OptConfig, mesh,
             fn = cache[key] = jax.jit(make(params, opt_state, batch, err))
         return fn(params, opt_state, batch, err)
 
+    def lower(params, opt_state, batch, err):
+        """Lowered (pre-compile) artifact of this step's jit (the cached one
+        the step itself runs) — what `launch.lint --hlo` compiles to HLO."""
+        key = tuple(jax.tree.structure(t)
+                    for t in (params, opt_state, batch, err))
+        fn = cache.get(key)
+        if fn is None:
+            fn = cache[key] = jax.jit(make(params, opt_state, batch, err))
+        return fn.lower(params, opt_state, batch, err)
+
+    step.lower = lower
     step._cache = cache
     step.program = program
     step.zero = False

@@ -706,6 +706,19 @@ def build_explicit_dp_step(model: Model, opt: adamw.OptConfig, mesh, axis: str =
         return {"m": mv, "v": mv,
                 "step": jax.ShapeDtypeStruct((), jnp.int32)}
 
+    def lower(params, opt_state, batch, err):
+        """Lowered (pre-compile) artifact of this step's jit — the same
+        cached jit the step itself runs, donation included, so the post-SPMD
+        HLO `launch.lint --hlo` analyzes is exactly what executes."""
+        key = tuple(jax.tree.structure(t)
+                    for t in (params, opt_state, batch, err))
+        fn = cache.get(key)
+        if fn is None:
+            fn = cache[key] = jax.jit(make(params, opt_state, batch, err),
+                                      donate_argnums=donate)
+        return fn.lower(params, opt_state, batch, err)
+
+    step.lower = lower
     step._cache = cache  # introspectable by tests
     step.program = step_program
     step.donate_argnums = donate  # read by analysis.trace.trace_step
