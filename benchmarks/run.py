@@ -788,6 +788,126 @@ def bench_hlolint():
     return rows
 
 
+def bench_faults():
+    """FaultGuard messy-fabric section (PR 10): the modeled degradation family
+    (core.scenarios.sweep_degradation) over the paper systems — guarded mean
+    step time strictly below oblivious on every mitigable scenario, incast
+    immune by Fig. 12 — plus a live guarded-vs-oblivious run on the host
+    devices under the canonical seeded FaultPlan: same fabric perturbations,
+    the guarded trainer detects drift, re-probes, lint-gates and swaps the
+    plan mid-run, and ends with strictly fewer straggler-exposed steps.
+    Writes BENCH_10.json at the repo root."""
+    import json
+    import tempfile
+    from pathlib import Path
+
+    import jax
+    import repro.compat  # noqa: F401
+    from repro.core.scenarios import (MESSY_SCENARIOS, check_degradation_shapes,
+                                      sweep_degradation)
+    from .common import emit
+
+    rows = []
+    bench = {"pr": 10, "section": "faults", "devices": jax.device_count(),
+             "modeled": {}, "oracles": {}}
+
+    # ---- modeled: guarded vs oblivious across scenarios and scale
+    endpoints = (8, 64, 512, 4096)
+    for system in ("leonardo", "alps"):
+        for scen in MESSY_SCENARIOS:
+            pts = sweep_degradation(system, scen, endpoints=endpoints)
+            for p in pts:
+                bench["modeled"][f"{system}/{scen}/n{p.n_endpoints}"] = {
+                    "degradation_oblivious": round(p.degradation_oblivious, 4),
+                    "degradation_guarded": round(p.degradation_guarded, 4),
+                    "guarded_wins": p.guarded_wins}
+            worst = max(pts, key=lambda p: p.degradation_oblivious)
+            rows.append({"name": f"faults/{system}/{scen}",
+                         "us_per_call": 0.0,
+                         "derived": f"obl={worst.degradation_oblivious:.2f}x "
+                                    f"grd={worst.degradation_guarded:.2f}x "
+                                    f"@n{worst.n_endpoints} "
+                                    f"wins={sum(p.guarded_wins for p in pts)}"
+                                    f"/{len(pts)}"})
+        oracles = check_degradation_shapes(system, endpoints=endpoints)
+        # the two BENCH_10 acceptance gates, plus the full shape family
+        assert oracles["congestion_strict_win"], (system, oracles)
+        assert oracles["straggler_strict_win"], (system, oracles)
+        assert all(oracles.values()), (system, oracles)
+        bench["oracles"][system] = oracles
+        rows.append({"name": f"faults/{system}/oracles", "us_per_call": 0.0,
+                     "derived": f"{sum(oracles.values())}/{len(oracles)} pass"})
+
+    # ---- live: guarded vs oblivious trainer under the same seeded plan
+    if jax.device_count() >= 4:
+        from jax.sharding import AxisType
+        from repro.configs import get_config
+        from repro.configs.base import ShapeConfig
+        from repro.core.faults import FaultPlan
+        from repro.runtime.guard import GuardConfig
+        from repro.runtime.train import Trainer, TrainConfig
+
+        cfg = get_config("smollm-135m").reduced()
+        shape = ShapeConfig("t", 64, 4, "train")
+
+        def live(guard):
+            mesh = jax.make_mesh((4,), ("data",),
+                                 axis_types=(AxisType.Auto,))
+            tc = TrainConfig(
+                steps=24, ckpt_every=8, ckpt_async=False,
+                ckpt_dir=tempfile.mkdtemp(), log_every=100,
+                explicit_dp=True, bucket_bytes=1 << 16,
+                straggler_threshold=2.0,
+                faults=FaultPlan.messy_fabric(seed=0, steps=24),
+                guard=guard,
+                guard_cfg=GuardConfig(patience=3, cooldown=6, lint=True,
+                                      max_replans=2))
+            t0 = time.perf_counter()
+            out = Trainer(cfg, shape, train_cfg=tc, mesh=mesh).run()
+            out["wall_s"] = time.perf_counter() - t0
+            return out
+
+        obl = live(False)
+        grd = live(True)
+        g = grd["guard"]
+        replans = [e for e in g["events"] if e["kind"] == "replan"]
+        # acceptance: guarded strictly beats oblivious under the identical
+        # fault plan, via at least one committed, lint-clean mid-run replan
+        assert grd["straggler_events"] < obl["straggler_events"], (
+            grd["straggler_events"], obl["straggler_events"])
+        assert g["n_replans"] >= 1, g
+        for e in replans:
+            assert not e["detail"].get("lint", {}).get("findings"), e
+        rows.append({"name": "faults/live/oblivious_4dev",
+                     "us_per_call": obl["wall_s"] * 1e6,
+                     "derived": f"stragglers={obl['straggler_events']} "
+                                f"retries={obl['retries']}"})
+        rows.append({"name": "faults/live/guarded_4dev",
+                     "us_per_call": grd["wall_s"] * 1e6,
+                     "derived": f"stragglers={grd['straggler_events']} "
+                                f"retries={grd['retries']} "
+                                f"replans={g['n_replans']} lint=clean"})
+        bench["live"] = {
+            "steps": 24, "fault_plan": "messy:0",
+            "oblivious": {"straggler_events": obl["straggler_events"],
+                          "retries": obl["retries"],
+                          "wall_s": round(obl["wall_s"], 2)},
+            "guarded": {"straggler_events": grd["straggler_events"],
+                        "retries": grd["retries"],
+                        "n_replans": g["n_replans"],
+                        "replan_steps": [e["step"] for e in replans],
+                        "wall_s": round(grd["wall_s"], 2)},
+            "fault_log": grd.get("fault_log", []),
+        }
+
+    path = Path(__file__).resolve().parent.parent / "BENCH_10.json"
+    path.write_text(json.dumps(bench, indent=2))
+    rows.append({"name": "faults/bench_artifact", "us_per_call": 0.0,
+                 "derived": str(path)})
+    emit("faults", rows, ["name", "us_per_call", "derived"])
+    return rows
+
+
 def main() -> None:
     from .figures import ALL_FIGURES
 
@@ -805,6 +925,7 @@ def main() -> None:
     sections["moe"] = bench_moe
     sections["lint"] = bench_lint
     sections["hlolint"] = bench_hlolint
+    sections["faults"] = bench_faults
     failures = []
     for name, fn in sections.items():
         if filters and not any(f in name for f in filters):

@@ -1,0 +1,292 @@
+"""Deterministic fault injection: the messy-fabric harness (ROADMAP item 4).
+
+The paper's core finding is that shared fabrics are *messy*: production noise
+erodes allreduce goodput by up to 50% at 1k endpoints (Obs. 8), the 95th-pct
+latency doubles the mean with a 132us max tail (Sec. V-B), incast saturates
+endpoint links no service level can protect (Fig. 12), and the MI250x study
+(arXiv:2302.14827) shows per-pair bandwidth heterogeneity is the norm.  The
+models for all of that live in `core.noise`; this module turns them into a
+*seeded, replayable schedule of faults* the live `Trainer.run` loop consumes:
+
+  * `FaultEvent` — one timed event: a per-tier link degradation or latency
+    spike window (priced through `ServiceLevelArbiter` / `NoiseModel`), a
+    straggler episode, a transient step failure, or a node loss.
+  * `FaultPlan` — an ordered, JSON-round-trippable set of events plus the
+    seed; `messy_fabric()` builds the canonical seeded family used by tests,
+    `benchmarks.run faults`, and the CI smoke.
+  * `FaultInjector` — the step-wrapping hook: `before_step` raises the point
+    faults (`TransientFault` / `NodeLossFault`) and `perturb` applies the
+    windowed degradations to the measured step time.  On a CPU host mesh the
+    fabric itself is simulated, so the injector is where the messy fabric
+    *exists*: the same seeded plan perturbs the guarded and the oblivious
+    runtime identically, which is what makes the guarded-vs-oblivious
+    degradation comparison meaningful.
+
+Determinism: every random draw is keyed on `(plan.seed, event.step, step)`,
+so a plan replays bit-identically across runs, processes, and the
+guarded/oblivious pair.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .noise import NoiseModel, ServiceLevelArbiter, TrafficClass
+
+# windowed kinds degrade every step of [step, step + duration); point kinds
+# fire exactly once at their step
+KINDS = ("link_degrade", "latency_spike", "straggler",
+         "transient_fail", "node_loss")
+WINDOWED = ("link_degrade", "latency_spike", "straggler")
+POINT = ("transient_fail", "node_loss")
+
+
+class TransientFault(RuntimeError):
+    """A recoverable step failure (the injected analog of a comm timeout or a
+    device reset): the trainer's bounded-retry path restores and replays."""
+
+
+class NodeLossFault(RuntimeError):
+    """A device (node) left the job: the trainer's elastic path rebuilds the
+    mesh on the surviving device set and restores onto it."""
+
+    def __init__(self, message: str, lost: Sequence[int] = ()):
+        super().__init__(message)
+        self.lost = tuple(int(d) for d in lost)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One timed fault.  `severity` is kind-specific:
+
+      * link_degrade — aggressor demand as a multiple of the victim's (the
+        arbiter turns it into a goodput fraction);
+      * latency_spike — multiplier on the noise model's lognormal sigma (the
+        queueing tail widens, the mean holds);
+      * straggler — whole-step slowdown of the afflicted device (synchronous
+        collectives make it everyone's slowdown);
+      * transient_fail / node_loss — unused (point events).
+    """
+
+    step: int
+    kind: str
+    duration: int = 1
+    tier: str = "inter"          # fabric tier the event hits ("intra"/"inter")
+    severity: float = 2.0
+    device: int = -1             # straggler / node-loss target (-1 = any)
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; one of {KINDS}")
+        if self.step < 0 or self.duration < 1:
+            raise ValueError(f"bad fault timing step={self.step} "
+                             f"duration={self.duration}")
+        if self.severity <= 0:
+            raise ValueError(f"severity must be > 0, got {self.severity}")
+
+    def active_at(self, step: int) -> bool:
+        if self.kind in POINT:
+            return step == self.step
+        return self.step <= step < self.step + self.duration
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "FaultEvent":
+        return cls(**{k: d[k] for k in
+                      ("step", "kind", "duration", "tier", "severity", "device")
+                      if k in d})
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A seeded, ordered schedule of fault events.
+
+    `comm_fraction` is the share of a clean step the fabric transfers occupy
+    — the lever that converts a goodput fraction into a step-time factor
+    (`(1 - f) + f / goodput`).  It is part of the plan (not the injector)
+    because the same plan must degrade the guarded and oblivious runs
+    identically.
+    """
+
+    events: Tuple[FaultEvent, ...] = ()
+    seed: int = 0
+    comm_fraction: float = 0.5
+
+    def __post_init__(self):
+        object.__setattr__(self, "events",
+                           tuple(sorted(self.events, key=lambda e: e.step)))
+        if not 0.0 < self.comm_fraction <= 1.0:
+            raise ValueError(f"comm_fraction in (0, 1], got {self.comm_fraction}")
+
+    def active(self, step: int) -> List[FaultEvent]:
+        return [e for e in self.events if e.active_at(step)]
+
+    def point_events(self, step: int) -> List[FaultEvent]:
+        return [e for e in self.events if e.kind in POINT and e.step == step]
+
+    # --------------------------------------------------------- persistence
+    def to_dict(self) -> Dict:
+        return {"version": 1, "seed": self.seed,
+                "comm_fraction": self.comm_fraction,
+                "events": [e.to_dict() for e in self.events]}
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "FaultPlan":
+        if d.get("version", 1) != 1:
+            raise ValueError(f"unknown FaultPlan version {d.get('version')!r}")
+        return cls(events=tuple(FaultEvent.from_dict(e)
+                                for e in d.get("events", ())),
+                   seed=int(d.get("seed", 0)),
+                   comm_fraction=float(d.get("comm_fraction", 0.5)))
+
+    def save(self, path: str) -> None:
+        p = Path(path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(self.to_dict(), indent=2))
+
+    @classmethod
+    def load(cls, path: str) -> "FaultPlan":
+        return cls.from_dict(json.loads(Path(path).read_text()))
+
+    # ------------------------------------------------------------ builders
+    @staticmethod
+    def messy_fabric(seed: int = 0, steps: int = 32,
+                     node_loss: bool = False) -> "FaultPlan":
+        """The canonical seeded messy-fabric plan: a persistent inter-tier
+        link degradation (the drift the guard must catch), a latency-spike
+        window, a couple of straggler episodes, and one transient failure
+        after the first checkpoint window.  `node_loss=True` adds a node loss
+        near the end (off by default: it shrinks the mesh, which makes the
+        guarded-vs-oblivious step-time comparison apples-to-oranges)."""
+        rng = np.random.default_rng(seed)
+        t_degrade = max(6, steps // 3)
+        events = [
+            # persistent congestion: an aggressor tenant arrives and stays
+            FaultEvent(step=t_degrade, kind="link_degrade",
+                       duration=max(steps - t_degrade, 1), tier="inter",
+                       severity=float(rng.uniform(3.0, 5.0))),
+            # a queueing-tail widening window (Sec. V-B shape)
+            FaultEvent(step=max(2, steps // 6), kind="latency_spike",
+                       duration=3, tier="inter",
+                       severity=float(rng.uniform(2.0, 4.0))),
+            # one recoverable step failure, late enough that a checkpoint
+            # cadence of <= steps//3 has committed at least one snapshot
+            FaultEvent(step=max(8, steps // 2), kind="transient_fail"),
+        ]
+        for _ in range(2):
+            events.append(FaultEvent(
+                step=int(rng.integers(2, max(steps - 1, 3))), kind="straggler",
+                duration=1, severity=float(rng.uniform(2.5, 4.0)),
+                device=int(rng.integers(0, 8))))
+        if node_loss:
+            events.append(FaultEvent(step=max(steps - 6, t_degrade + 2),
+                                     kind="node_loss", device=1))
+        return FaultPlan(events=tuple(events), seed=seed, comm_fraction=0.6)
+
+    @classmethod
+    def resolve(cls, spec: str, steps: int = 32) -> "FaultPlan":
+        """CLI resolution: a JSON file path, or a named builtin —
+        ``messy[:seed]`` / ``nodeloss[:seed]``."""
+        name, _, seed_s = spec.partition(":")
+        seed = int(seed_s) if seed_s else 0
+        if name == "messy":
+            return cls.messy_fabric(seed=seed, steps=steps)
+        if name == "nodeloss":
+            return cls.messy_fabric(seed=seed, steps=steps, node_loss=True)
+        if Path(spec).exists():
+            return cls.load(spec)
+        raise ValueError(f"--faults {spec!r}: not a file and not a builtin "
+                         f"('messy[:seed]' / 'nodeloss[:seed]')")
+
+
+class FaultInjector:
+    """The step-wrapping hook `Trainer.run` drives.
+
+    `before_step` raises the plan's point faults; `perturb` converts the
+    active windowed events into a step-time factor through the arbiter/noise
+    models and applies it to the measured step time.  `on_replan` models the
+    re-ranked plan's recovery on simulated fabrics: a replan cannot repair
+    the physical link, but routing/rebucketing around the degraded tier
+    recovers part of the *excess* — straggler excess is exempt (a slow
+    device is not a routing problem)."""
+
+    def __init__(self, plan: FaultPlan,
+                 noise: Optional[NoiseModel] = None,
+                 arbiter: Optional[ServiceLevelArbiter] = None):
+        self.plan = plan
+        self.noise = noise or NoiseModel.leonardo_diff_group()
+        self.arbiter = arbiter or ServiceLevelArbiter(link_bw=25e9,
+                                                      endpoint_bw=12.5e9)
+        self.mitigation = 1.0   # scales the fabric excess; 1.0 = oblivious
+        self._fired: set = set()
+        self.log: List[Dict] = []
+
+    # ------------------------------------------------------------- hooks
+    def before_step(self, step: int) -> None:
+        for ev in self.plan.point_events(step):
+            key = (ev.step, ev.kind, ev.device)
+            if key in self._fired:
+                continue
+            self._fired.add(key)
+            self.log.append({"step": step, "kind": ev.kind,
+                             "device": ev.device})
+            if ev.kind == "transient_fail":
+                raise TransientFault(
+                    f"injected transient step failure at step {step}")
+            raise NodeLossFault(
+                f"injected node loss at step {step} (device {ev.device})",
+                lost=(ev.device,) if ev.device >= 0 else (0,))
+
+    def perturb(self, step: int, dt: float) -> float:
+        fabric, straggler = self.factors(step)
+        return dt * (1.0 + (fabric - 1.0) * self.mitigation) * straggler
+
+    def on_replan(self, recovered: float = 0.6) -> None:
+        self.mitigation *= max(0.0, 1.0 - recovered)
+        self.log.append({"kind": "replan_mitigation",
+                         "mitigation": self.mitigation})
+
+    # ------------------------------------------------------------ pricing
+    def factors(self, step: int) -> Tuple[float, float]:
+        """(fabric_factor, straggler_factor) at `step` — both >= 1, both
+        deterministic in (plan.seed, step)."""
+        f = self.plan.comm_fraction
+        fabric = 1.0
+        straggler = 1.0
+        for ev in self.plan.active(step):
+            if ev.kind == "link_degrade":
+                g = self.degraded_goodput(ev)
+                fabric *= (1.0 - f) + f / max(g, 1e-6)
+            elif ev.kind == "latency_spike":
+                widened = dataclasses.replace(
+                    self.noise, sigma=self.noise.sigma * ev.severity)
+                rng = np.random.default_rng((self.plan.seed, ev.step, step))
+                lat = float(widened.sample_latency(rng, 64).mean())
+                # the tail's mean over the base: extra serialized latency on
+                # every bucket of the comm fraction
+                fabric *= 1.0 + f * max(lat / self.noise.base_latency - 1.0,
+                                        0.0)
+            elif ev.kind == "straggler":
+                straggler *= ev.severity
+        return fabric, straggler
+
+    def degraded_goodput(self, ev: FaultEvent) -> float:
+        """Goodput fraction under a link_degrade event: the victim shares its
+        service level (the paper's production default) with an aggressor
+        offering `severity` times its demand."""
+        demand = self.arbiter.link_bw
+        victim = TrafficClass("victim", 0, demand)
+        aggr = [TrafficClass("aggressor", 0, ev.severity * demand)]
+        return self.arbiter.victim_goodput(victim, aggr) / demand
+
+    def slowdown(self, step: int) -> float:
+        """Combined oblivious step-time factor at `step` (mitigation not
+        applied) — what the degradation scenarios price."""
+        fabric, straggler = self.factors(step)
+        return fabric * straggler

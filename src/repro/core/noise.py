@@ -175,6 +175,16 @@ class StragglerMitigator:
             self._baseline = (1 - self.ewma) * self._baseline + self.ewma * step_time
         return ev
 
+    def reset_baseline(self) -> None:
+        """Forget the EWMA baseline and re-seed from the next warmup window.
+
+        The drift guard calls this after a mid-run re-plan: the step time
+        under the new plan is a different population, and judging it against
+        the pre-drift baseline would flag every healthy step as a straggler
+        (the stale-baseline failure mode the oblivious runtime exhibits)."""
+        self._baseline = None
+        self._warmup = []
+
     @property
     def baseline(self) -> Optional[float]:
         return self._baseline

@@ -219,6 +219,18 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                 dp_wire_bytes_planned_zero=zwb["total"],
                 dp_wire_ratio_zero=zwb["ratio"],
             )
+            # messy-fabric pricing (core.scenarios.sweep_degradation): what
+            # this cell's step time degrades to under congestion/stragglers
+            # at its device count, oblivious vs drift-guarded (ROADMAP 4)
+            from ..core.scenarios import sweep_degradation
+            degradation = {}
+            for scen in ("congestion", "straggler"):
+                pt = sweep_degradation("tpu_v5e", scen,
+                                       endpoints=(n_dev,))[0]
+                degradation[scen] = dict(
+                    oblivious=round(pt.degradation_oblivious, 4),
+                    guarded=round(pt.degradation_guarded, 4),
+                    guarded_wins=pt.guarded_wins)
             plan_prog = plan.step_program()
             lint_plan = _lint_report(plan_prog, hlo=True)
             lint_zero = _lint_report(prg.train_step_program(zero=True),
@@ -248,6 +260,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                 exposed_comm_hlo_static_s=_static_exposed(lint_plan),
                 exposed_comm_zero_hlo_static_s=_static_exposed(lint_zero),
                 lint=dict(plan=lint_plan, zero=lint_zero),
+                degradation=degradation,
                 **overlap_terms_zero,
             )
         cell.update(

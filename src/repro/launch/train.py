@@ -5,7 +5,8 @@
       [--residual-shard] [--fused-qkv] [--policy artifacts/policy.json] \
       [--calibration artifacts/bench/calibration.json] \
       [--explicit-dp] [--bucket-bytes N] [--overlap] [--chunks C] \
-      [--compress-bits {0,8,auto}] [--zero]
+      [--compress-bits {0,8,auto}] [--zero] \
+      [--faults messy:0|PLAN.json] [--guard] [--straggler-action sync]
 
 On this CPU container use --reduced (full configs are exercised via the dry-run).
 The mesh string "DxM" builds (data=D, model=M) over the available devices;
@@ -155,6 +156,23 @@ def main(argv=None):
                          "params at the wire dtype; --compress-bits 8 makes "
                          "the all-gather leg int8")
     ap.add_argument("--straggler-threshold", type=float, default=2.5)
+    ap.add_argument("--straggler-action", default="log",
+                    choices=["log", "sync", "skip"],
+                    help="on a detected straggler step: log it, 'sync' (insert "
+                         "a resynchronizing barrier), or 'skip' (revert the "
+                         "step's update — rejected with --zero, where optimizer "
+                         "state is sharded)")
+    ap.add_argument("--faults", default=None,
+                    help="fault-injection plan: 'messy[:SEED]' (canonical "
+                         "messy-fabric plan, core.faults), 'nodeloss[:SEED]', "
+                         "or a FaultPlan JSON path; faults perturb the "
+                         "simulated fabric deterministically")
+    ap.add_argument("--guard", action="store_true",
+                    help="drift-aware execution (runtime.guard): watch step "
+                         "times against an EWMA band, on sustained drift "
+                         "re-probe/refit/re-rank the plan and lint-gate the "
+                         "swap; guard events land in "
+                         "artifacts/guard_report.json")
     ap.add_argument("--lint", action="store_true",
                     help="statically lint the compiled step against its "
                          "StepProgram before training (analysis.lint); any "
@@ -243,14 +261,23 @@ def main(argv=None):
               f"({rep['records']} collectives, {h['records']} compiled, "
               f"{h['n_async']} async, {rep['seconds']:.2f}s)")
 
+    faults = None
+    if args.faults:
+        from ..core.faults import FaultPlan
+        faults = FaultPlan.resolve(args.faults, steps=args.steps)
+        print(f"faults: {args.faults} -> {len(faults.events)} events "
+              f"(seed={faults.seed})")
+
     trainer = Trainer(
         cfg, shape,
         OptConfig(peak_lr=args.lr, warmup_steps=args.warmup, decay_steps=args.steps),
         TrainConfig(steps=args.steps, microbatches=args.microbatches,
                     ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir,
                     log_every=10, straggler_threshold=args.straggler_threshold,
+                    straggler_action=args.straggler_action,
                     explicit_dp=args.explicit_dp, dcn_axis=dcn_axis,
-                    policy=policy, program=program),
+                    policy=policy, program=program,
+                    faults=faults, guard=args.guard),
         mesh=mesh,
     )
     result = trainer.run(resume=args.resume)
@@ -258,6 +285,21 @@ def main(argv=None):
     if losses:
         print(f"done: step {result['final_step']}, loss {losses[0]:.4f} -> "
               f"{losses[-1]:.4f}, stragglers {result['straggler_events']}")
+    if result.get("retries") or result.get("skipped_steps"):
+        print(f"recovery: {result['retries']} transient retr"
+              f"{'y' if result['retries'] == 1 else 'ies'}, "
+              f"{result.get('skipped_steps', 0)} skipped step(s)")
+    if args.guard:
+        import json
+        import os
+        rep = result.get("guard", {})
+        os.makedirs("artifacts", exist_ok=True)
+        path = os.path.join("artifacts", "guard_report.json")
+        with open(path, "w") as f:
+            json.dump(rep, f, indent=2, sort_keys=True)
+        print(f"guard: {rep.get('n_replans', 0)} replan(s), "
+              f"{rep.get('n_rejected', 0)} rejected, "
+              f"{rep.get('n_events', 0)} event(s) -> {path}")
     return 0
 
 

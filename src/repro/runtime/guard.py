@@ -1,0 +1,149 @@
+"""Drift detection + online re-planning: the FaultGuard loop (ROADMAP item 4).
+
+The planning stack prices every step before it runs (`exposed_comm_time`
+over the calibrated plan), but until now nothing checked the fabric kept its
+side of the bargain: congestion, link flap, and per-pair heterogeneity erode
+the alpha-beta fits mid-run and the oblivious runtime just keeps paying.
+
+`DriftGuard` closes the loop:
+
+  * every step's measured time is compared against a reference (the
+    calibrated `exposed_comm_time` prediction when the caller has one, else
+    a warmup-median self-calibration — the live rebaseline of the same
+    quantity) through an EWMA of the measured/reference ratio;
+  * when the EWMA leaves the band for `patience` consecutive steps the guard
+    declares drift and invokes the re-planner: a cheap
+    `characterize.inter_tier_p2p_sweep` re-probe of the live mesh, a
+    `calibrate.fit_profile` refit of the affected tiers, a plan re-rank
+    through `CommPlan.from_topology(calibration=)` (rebucketing + wire
+    re-decision ride along), and a `lint_program_on_mesh` gate before the
+    swapped step is allowed to run (the replanner callable lives on the
+    Trainer, which owns the mesh and the step builder);
+  * after a committed swap the guard rebaselines: the post-replan step time
+    is a new population.
+
+Every decision is recorded as a `GuardEvent` (drift / replan /
+replan_rejected) with the probe fit and the lint report in `detail`, so the
+run's resilience history is auditable next to its lint artifacts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class GuardConfig:
+    band: float = 0.3           # relative band around the reference
+    ewma: float = 0.25          # smoothing of the measured/reference ratio
+    patience: int = 3           # consecutive out-of-band steps before replan
+    cooldown: int = 8           # min steps between replans
+    warmup: int = 3             # steps of median self-calibration
+    max_replans: int = 3
+    probe_sizes: Tuple[int, ...] = (1 << 10, 1 << 14, 1 << 18)
+    probe_iters: int = 2
+    lint: bool = True           # gate swapped plans through lint_program_on_mesh
+    # modeled recovery a committed re-plan claims on *simulated* fabrics
+    # (CPU host meshes): routing/rebucketing around the degraded tier
+    # recovers this fraction of the fabric excess (core.faults.FaultInjector)
+    recovered_fraction: float = 0.6
+
+
+@dataclasses.dataclass
+class GuardEvent:
+    step: int
+    kind: str                   # "drift" | "replan" | "replan_rejected"
+    measured_s: float
+    reference_s: float
+    ratio: float
+    detail: Dict = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> Dict:
+        return {"step": self.step, "kind": self.kind,
+                "measured_s": self.measured_s,
+                "reference_s": self.reference_s,
+                "ratio": round(self.ratio, 4), "detail": self.detail}
+
+
+class DriftGuard:
+    """EWMA drift band around a reference step time.
+
+    `replanner(step)` is supplied by the owner (the Trainer): it runs the
+    probe → refit → re-rank → lint pipeline and returns ``(committed,
+    detail)``.  The guard decides *when*; the replanner decides *what*.
+    """
+
+    def __init__(self, cfg: Optional[GuardConfig] = None,
+                 reference_s: Optional[float] = None,
+                 replanner: Optional[Callable[[int], Tuple[bool, Dict]]] = None):
+        self.cfg = cfg or GuardConfig()
+        self.reference = reference_s
+        self.replanner = replanner
+        self.events: List[GuardEvent] = []
+        self._warmup: List[float] = []
+        self._ratio = 1.0
+        self._hot = 0
+        self._last_replan = -(10 ** 9)
+        self.n_replans = 0
+
+    # ------------------------------------------------------------- observe
+    def observe(self, step: int, dt: float) -> Optional[GuardEvent]:
+        """Feed one measured step time; returns the event it triggered (the
+        caller reacts to kind == "replan" by resetting its own baselines)."""
+        c = self.cfg
+        if self.reference is None:
+            # self-calibrate: median of the warmup window (a compile-heavy
+            # first step must not inflate the reference)
+            self._warmup.append(dt)
+            if len(self._warmup) >= max(c.warmup, 1):
+                self.reference = float(statistics.median(self._warmup))
+                self._warmup = []
+                self._ratio = 1.0
+            return None
+        ratio = dt / self.reference
+        self._ratio = (1 - c.ewma) * self._ratio + c.ewma * ratio
+        if self._ratio <= 1.0 + c.band:
+            self._hot = 0
+            return None
+        self._hot += 1
+        if self._hot < c.patience:
+            return None
+        if step - self._last_replan < c.cooldown or \
+                self.n_replans >= c.max_replans:
+            if self._hot == c.patience:  # one drift record per episode
+                return self._emit(step, "drift", dt,
+                                  {"suppressed": "cooldown"
+                                   if step - self._last_replan < c.cooldown
+                                   else "max_replans"})
+            return None
+        self._hot = 0
+        self._last_replan = step
+        if self.replanner is None:
+            return self._emit(step, "drift", dt, {})
+        committed, detail = self.replanner(step)
+        kind = "replan" if committed else "replan_rejected"
+        if committed:
+            self.n_replans += 1
+            # new plan, new population: re-seed the reference from the next
+            # warmup window instead of judging it against the drifted one
+            self.reference = None
+        return self._emit(step, kind, dt, detail)
+
+    def _emit(self, step: int, kind: str, dt: float, detail: Dict) -> GuardEvent:
+        ref = self.reference if self.reference is not None else dt
+        ev = GuardEvent(step, kind, dt, ref, self._ratio, detail)
+        self.events.append(ev)
+        return ev
+
+    # -------------------------------------------------------------- report
+    def report(self) -> Dict:
+        """Machine-readable guard history — written alongside lint reports
+        (each committed/rejected replan embeds its lint verdict in detail)."""
+        return {
+            "n_events": len(self.events),
+            "n_replans": self.n_replans,
+            "n_rejected": sum(1 for e in self.events
+                              if e.kind == "replan_rejected"),
+            "events": [e.to_dict() for e in self.events],
+        }

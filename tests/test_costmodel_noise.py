@@ -181,6 +181,39 @@ def test_service_level_isolation_fig12():
     assert g_disjoint == pytest.approx(10e9)    # disjoint switches: no interference
 
 
+def test_incast_goodput_invariant_under_sl(sl_count: int = 4):
+    """Fig. 12 regression: moving the victim (or the aggressors) to any other
+    service level leaves incast goodput unchanged — the congestion lives on
+    the destination endpoint link, below the arbitration point."""
+    arb = ServiceLevelArbiter(link_bw=25e9, endpoint_bw=12.5e9)
+    victim = TrafficClass("allreduce", 0, 10e9)
+    base = arb.victim_goodput(victim, [TrafficClass("incast", 0, 40e9)],
+                              "incast")
+    for sl in range(1, sl_count):
+        g = arb.victim_goodput(victim, [TrafficClass("incast", sl, 40e9)],
+                               "incast")
+        assert g == pytest.approx(base, rel=1e-9), sl
+    # cross-check: the same SL move DOES help against a non-incast aggressor
+    a2a_same = arb.victim_goodput(victim, [TrafficClass("a", 0, 40e9)])
+    a2a_diff = arb.victim_goodput(victim, [TrafficClass("a", 1, 40e9)])
+    assert a2a_diff > a2a_same
+
+
+def test_incast_cap_scales_with_sender_demand():
+    """The endpoint-link share shrinks as more senders pile on, and is capped
+    by endpoint_bw regardless of the (faster) switch link."""
+    arb = ServiceLevelArbiter(link_bw=100e9, endpoint_bw=12.5e9)
+    victim = TrafficClass("allreduce", 0, 10e9)
+    goodputs = []
+    for n_senders in (1, 2, 4, 8):
+        aggr = [TrafficClass(f"s{i}", 1, 20e9) for i in range(n_senders)]
+        goodputs.append(arb.victim_goodput(victim, aggr, "incast"))
+    assert all(b < a for a, b in zip(goodputs, goodputs[1:]))
+    assert goodputs[0] <= arb.endpoint_bw
+    # closed form: endpoint_bw * demand / (demand + incast_demand)
+    assert goodputs[1] == pytest.approx(12.5e9 * 10e9 / (10e9 + 40e9))
+
+
 def test_straggler_mitigator():
     sm = StragglerMitigator(threshold=1.5, warmup_steps=3)
     times = [1.0] * 6 + [2.5] + [1.0] * 3

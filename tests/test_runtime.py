@@ -244,6 +244,133 @@ def test_checkpoint_shard_spec_metadata_roundtrip(tmp_path):
         cm.restore(tree, specs=other)
 
 
+def test_recovery_bounded_retry_exhaustion(tmp_path):
+    """A fault that keeps firing exhausts max_retries and surfaces as a named
+    persistent failure (the old loop retried forever)."""
+    cfg = get_config("smollm-135m").reduced()
+    tr = Trainer(cfg, SHAPE, adamw.OptConfig(),
+                 TrainConfig(steps=8, ckpt_every=2, ckpt_async=False,
+                             ckpt_dir=str(tmp_path), log_every=100,
+                             max_retries=3, retry_backoff_s=0.0))
+    with pytest.raises(RuntimeError, match="persistent failure"):
+        tr.run(inject_failure_at=[4] * 10)
+    assert [r["attempt"] for r in tr.retry_log] == [1, 2, 3, 4]
+
+
+def test_recovery_repeated_transient_fault_completes(tmp_path):
+    """Two distinct firings of the same fault step (a re-failure after the
+    replay) both recover within the retry budget; the old cleared-before-raise
+    bug made a repeated entry unreachable."""
+    cfg = get_config("smollm-135m").reduced()
+    tr = Trainer(cfg, SHAPE, adamw.OptConfig(),
+                 TrainConfig(steps=8, ckpt_every=2, ckpt_async=False,
+                             ckpt_dir=str(tmp_path), log_every=100,
+                             max_retries=3, retry_backoff_s=0.0))
+    res = tr.run(inject_failure_at=[4, 4])
+    assert res["final_step"] == 8
+    assert res["retries"] == 2
+
+
+def test_recovery_without_checkpoint_surfaces_fault(tmp_path):
+    """restored is None: nothing to restore into, the transient fault must
+    propagate instead of looping on an unrecoverable state."""
+    cfg = get_config("smollm-135m").reduced()
+    tr = Trainer(cfg, SHAPE, adamw.OptConfig(),
+                 TrainConfig(steps=8, ckpt_every=0, ckpt_async=False,
+                             ckpt_dir=str(tmp_path), log_every=100))
+    with pytest.raises(RuntimeError, match="injected device failure"):
+        tr.run(inject_failure_at=2)
+    assert tr.retry_log == []
+
+
+def test_recovery_fatal_error_propagates_immediately(tmp_path):
+    """A RuntimeError that does not look like a fabric/device fault is a bug:
+    no restore, no retry (the old catch-all swallowed it)."""
+    cfg = get_config("smollm-135m").reduced()
+    tr = Trainer(cfg, SHAPE, adamw.OptConfig(),
+                 TrainConfig(steps=8, ckpt_every=2, ckpt_async=False,
+                             ckpt_dir=str(tmp_path), log_every=100))
+    orig = tr.step_fn
+
+    def buggy(params, opt_state, batch):
+        if int(opt_state["step"]) == 4:
+            raise RuntimeError("loss scaler misconfigured (a genuine bug)")
+        return orig(params, opt_state, batch)
+
+    tr.step_fn = buggy
+    with pytest.raises(RuntimeError, match="genuine bug"):
+        tr.run()
+    assert tr.retry_log == []
+
+
+def test_straggler_skip_reverts_step(tmp_path):
+    """'skip' drops the straggler step's update: the run records the skips
+    and the final state is reachable without them (loss stays finite)."""
+    import repro.compat  # noqa: F401
+    from jax.sharding import AxisType
+    from repro.core.faults import FaultEvent, FaultPlan
+
+    cfg = get_config("smollm-135m").reduced()
+    mesh = jax.make_mesh((1,), ("data",), axis_types=(AxisType.Auto,))
+    plan = FaultPlan(events=(FaultEvent(step=7, kind="straggler", severity=6.0),
+                             FaultEvent(step=9, kind="straggler", severity=6.0)))
+    tr = Trainer(cfg, SHAPE, adamw.OptConfig(),
+                 TrainConfig(steps=12, ckpt_every=0, ckpt_async=False,
+                             ckpt_dir=str(tmp_path), log_every=100,
+                             explicit_dp=True, bucket_bytes=1 << 16,
+                             straggler_threshold=2.0, straggler_action="skip",
+                             faults=plan),
+                 mesh=mesh)
+    res = tr.run()
+    assert res["final_step"] == 12
+    # the two injected episodes must be caught, and every detected straggler
+    # (injected or wall-clock) skipped — on CPU real timing jitter can add one
+    assert res["straggler_events"] >= 2
+    assert res["skipped_steps"] == res["straggler_events"]
+    skipped = {m["step"] for m in res["metrics"] if m["straggler"]}
+    assert {7, 9} <= skipped
+    assert all(np.isfinite(m["loss"]) for m in res["metrics"])
+
+
+def test_straggler_skip_rejected_under_zero(tmp_path):
+    cfg = get_config("smollm-135m").reduced()
+    with pytest.raises(ValueError, match="unsound with zero"):
+        Trainer(cfg, SHAPE, adamw.OptConfig(),
+                TrainConfig(steps=1, ckpt_dir=str(tmp_path), zero=True,
+                            explicit_dp=True, straggler_action="skip"))
+
+
+def test_mid_run_plan_swap_bit_parity(tmp_path):
+    """_swap_policy on the fp32 wire is numerically transparent: checkpoint at
+    6, swap the policy, resume to 12 — bitwise the same losses as an
+    uninterrupted 12-step run."""
+    import repro.compat  # noqa: F401
+    from jax.sharding import AxisType
+    from repro.core.autotune import CollectivePolicy
+
+    cfg = get_config("smollm-135m").reduced()
+    opt = adamw.OptConfig(peak_lr=1e-3, warmup_steps=2, decay_steps=50)
+
+    def make(ckpt_dir, steps):
+        mesh = jax.make_mesh((1,), ("data",), axis_types=(AxisType.Auto,))
+        return Trainer(cfg, SHAPE, opt,
+                       TrainConfig(steps=steps, ckpt_every=6, ckpt_async=False,
+                                   ckpt_dir=str(ckpt_dir), log_every=100,
+                                   explicit_dp=True, bucket_bytes=1 << 16),
+                       mesh=mesh)
+
+    straight = make(tmp_path / "a", 12).run()
+    tr = make(tmp_path / "b", 6)
+    tr.run()
+    tr._swap_policy(CollectivePolicy.from_model())   # what a replan commits
+    tr.cfg.steps = 12
+    tr.run(resume=True)
+    l1 = {m["step"]: m["loss"] for m in straight["metrics"]}
+    l2 = {m["step"]: m["loss"] for m in tr.metrics_log}
+    for s in range(6, 12):
+        assert l2[s] == l1[s], f"step {s}: {l2[s]} != {l1[s]} (bitwise)"
+
+
 def test_trainer_zero_requires_explicit_dp():
     cfg = get_config("smollm-135m").reduced()
     with pytest.raises(ValueError, match="explicit-DP"):
